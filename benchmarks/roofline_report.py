@@ -1,0 +1,49 @@
+"""Aggregate the dry-run JSONs into the roofline table (EXPERIMENTS.md data).
+
+Prints one CSV row per (arch x shape x mesh) with the three terms, dominant
+bottleneck, MODEL_FLOPS/HLO ratio, and memory footprint.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+OUT_DIR = "experiments/dryrun"
+
+
+def load_all(pattern="*.json"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(OUT_DIR, pattern))):
+        with open(path) as f:
+            d = json.load(f)
+        rows.append(d)
+    return rows
+
+
+def main():
+    rows = load_all()
+    ok = 0
+    for d in rows:
+        tag = f"{d.get('arch')}/{d.get('shape')}/{d.get('mesh')}"
+        if d.get("quant", "none") != "none":
+            tag += f"/{d['quant']}"
+        if "error" in d:
+            print(f"roofline/{tag},0.00,ERROR={d['error'][:120]}")
+            continue
+        ok += 1
+        r = d["roofline"]
+        pd = d["per_device"]
+        print(
+            f"roofline/{tag},{r['roofline_bound_s'] * 1e6:.1f},"
+            f"compute_s={r['compute_s']:.4g};memory_s={r['memory_s']:.4g};"
+            f"collective_s={r['collective_s']:.4g};dominant={r['dominant']};"
+            f"useful_ratio={d.get('useful_ratio', 0):.3f};"
+            f"peak_gb={pd['peak_hbm_gb']};method={d.get('method', '?')}"
+        )
+    print(f"roofline/summary,0.00,cells_ok={ok};cells_total={len(rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

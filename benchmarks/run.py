@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,act_error,...]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: table1,table2,act_error,"
+                         "speed,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    if want("act_error"):
+        from benchmarks import act_error
+        act_error.main()
+    if want("table2"):
+        from benchmarks import table2_recipe
+        table2_recipe.main()
+    if want("speed"):
+        from benchmarks import speed
+        speed.main()
+    if want("table1"):
+        from benchmarks import table1_accuracy
+        table1_accuracy.main()
+    if want("roofline"):
+        from benchmarks import roofline_report
+        roofline_report.main()
+
+
+if __name__ == "__main__":
+    main()

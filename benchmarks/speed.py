@@ -1,0 +1,124 @@
+"""Paper sec 6 deployment speed: float vs hybrid vs integer LSTM execution,
+and the zero-point-folding optimization on/off.
+
+On this CPU host the relative ordering (integer < hybrid < float runtime on
+memory-bound shapes, folding saves the per-call zp correction) mirrors the
+paper's RT-factor claims; absolute numbers are host-specific.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import recipe as R
+from repro.core.calibrate import Stats, TapCollector
+from repro.models import lstm as L
+from repro.models import quant_lstm as QL
+from repro.core import integer_ops as iops
+from repro.core import fixedpoint as fpx
+
+B, T, D = 8, 32, 512
+
+
+def _bench(fn, *args, iters=20):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main():
+    variant = L.LSTMVariant()
+    cfg = L.LSTMConfig(D, D, 0, variant)
+    params = L.init_lstm_params(jax.random.PRNGKey(0), cfg)
+    xs = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (B, T, D))
+
+    col = TapCollector()
+    L.lstm_layer(params, cfg, xs[:, :4], collector=col)
+    stats = Stats()
+    stats.merge(jax.device_get(col.snapshot()))
+    arrays, spec = R.quantize_lstm_layer(params, cfg, stats)
+
+    # float
+    f_us = _bench(jax.jit(lambda p, x: L.lstm_layer(p, cfg, x)[0]), params, xs)
+    print(f"speed/lstm_float,{f_us:.1f},B={B};T={T};D={D}")
+
+    # hybrid
+    wq, scales = QL.hybrid_weights(params)
+
+    @jax.jit
+    def hybrid(x):
+        h = jnp.zeros((B, D))
+        c = jnp.zeros((B, D))
+        def step(carry, x_t):
+            h, c = carry
+            acc = {g: QL.hybrid_matmul(x_t, wq["W"][g], scales[f"W_{g}"])
+                   + QL.hybrid_matmul(h, wq["R"][g], scales[f"R_{g}"])
+                   + params["b"][g] for g in ("i", "f", "z", "o")}
+            c = jax.nn.sigmoid(acc["i"]) * jnp.tanh(acc["z"]) + \
+                jax.nn.sigmoid(acc["f"]) * c
+            h = jax.nn.sigmoid(acc["o"]) * jnp.tanh(c)
+            return (h, c), h
+        (_, _), ys = jax.lax.scan(step, (h, c), jnp.swapaxes(x, 0, 1))
+        return ys
+
+    h_us = _bench(hybrid, xs)
+    print(f"speed/lstm_hybrid,{h_us:.1f},dynamic-range int8 weights")
+
+    # integer-only (zero point folded -- the paper's deployed form)
+    xs_q = QL.quantize_input(xs, spec.s_x, spec.zp_x)
+    i_us = _bench(jax.jit(
+        lambda a, x: QL.quant_lstm_layer(a, spec, x)[0]), arrays, xs_q)
+    print(f"speed/lstm_integer_folded,{i_us:.1f},sec-6 zp folding ON")
+
+    # integer with runtime zero-point correction (folding OFF)
+    @jax.jit
+    def unfolded(a, x_q):
+        def step(carry, x_t):
+            h, c = carry
+            gates = {}
+            for g in ("i", "f", "z", "o"):
+                gs = spec.gate_spec(g)
+                # runtime zp correction: colsum(W) * zp computed per call
+                acc_x = iops.matmul_i8_i32(x_t, a["W"][g]) - (
+                    jnp.sum(a["W"][g].astype(jnp.int32), 0) * spec.zp_x)
+                acc_h = iops.matmul_i8_i32(h, a["R"][g]) - (
+                    jnp.sum(a["R"][g].astype(jnp.int32), 0) * spec.zp_h
+                ) + a["fold_hb"][g] * 0
+                gate = fpx.saturating_add_i32(
+                    fpx.multiply_by_quantized_multiplier(acc_x, *gs.eff_x),
+                    fpx.multiply_by_quantized_multiplier(acc_h, *gs.eff_h))
+                gates[g] = fpx.saturate_i16(gate)
+            f_a = fpx.sigmoid_q15(gates["f"], 3).astype(jnp.int32)
+            z_a = fpx.tanh_q15(gates["z"], 3).astype(jnp.int32)
+            i_a = fpx.sigmoid_q15(gates["i"], 3).astype(jnp.int32)
+            n_c = 15 - spec.cell_int_bits
+            c = fpx.saturate_i16(fpx.saturating_add_i32(
+                fpx.rounding_divide_by_pot(i_a * z_a, 30 - n_c),
+                fpx.rounding_divide_by_pot(f_a * c.astype(jnp.int32), 15)))
+            o_a = fpx.sigmoid_q15(gates["o"], 3).astype(jnp.int32)
+            m_raw = o_a * fpx.tanh_q15(c, spec.cell_int_bits).astype(jnp.int32)
+            h = fpx.saturate_i8(
+                fpx.multiply_by_quantized_multiplier(m_raw, *spec.eff_m)
+                + jnp.int32(spec.zp_m))
+            return (h, c), h
+        h0 = jnp.full((B, D), spec.zp_h, jnp.int8)
+        c0 = jnp.zeros((B, D), jnp.int16)
+        _, ys = jax.lax.scan(step, (h0, c0), jnp.swapaxes(x_q, 0, 1))
+        return ys
+
+    u_us = _bench(unfolded, arrays, xs_q)
+    print(f"speed/lstm_integer_unfolded,{u_us:.1f},sec-6 zp folding OFF")
+    print(f"speed/summary,0.0,int_vs_float={f_us/i_us:.2f}x;"
+          f"folding_gain={u_us/i_us:.2f}x")
+    return {"float": f_us, "hybrid": h_us, "integer": i_us, "unfolded": u_us}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Table 2: the full quantization recipe for all 8 LSTM variants.
+
+Builds each (LN x Proj x PH) variant, calibrates on random data, applies the
+recipe, and prints every derived scale/format -- the machine-checkable form
+of the paper's appendix table.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import recipe as R
+from repro.core.calibrate import Stats, TapCollector
+from repro.models import lstm as L
+
+
+def main():
+    rows = []
+    for ln in (False, True):
+        for proj in (False, True):
+            for ph in (False, True):
+                variant = L.LSTMVariant(ln, proj, ph, False)
+                cfg = L.LSTMConfig(16, 24, 12 if proj else 0, variant)
+                params = L.init_lstm_params(jax.random.PRNGKey(0), cfg)
+                xs = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 16))
+                col = TapCollector()
+                L.lstm_layer(params, cfg, xs, collector=col)
+                stats = Stats()
+                stats.merge(jax.device_get(col.snapshot()))
+                _, spec = R.quantize_lstm_layer(params, cfg, stats)
+                table = R.recipe_table(spec)
+                for tensor, desc in table.items():
+                    print(f"table2/{variant.name}/{tensor},0.00,{desc}")
+                rows.append((variant.name, table))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

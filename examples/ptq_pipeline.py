@@ -1,0 +1,64 @@
+"""The paper's full statistics-collection story (sec 4): post-training
+quantization vs quantization-aware training, side by side.
+
+Trains a small LSTM regressor, then quantizes it three ways:
+  * PTQ with a LARGE calibration set,
+  * PTQ with a ~100-sample calibration set (the paper's headline finding:
+    this is enough),
+  * QAT (fake-quant fine-tuning with separate input/recurrent scales,
+    fig 16) followed by the same integer conversion.
+
+    PYTHONPATH=src python examples/ptq_pipeline.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import recipe
+from repro.core.calibrate import Stats, TapCollector
+from repro.models import lstm, quant_lstm
+
+variant = lstm.LSTMVariant(use_layernorm=True)
+cfg = lstm.LSTMConfig(16, 48, 0, variant)
+key = jax.random.PRNGKey(0)
+params = lstm.init_lstm_params(key, cfg)
+
+xs = jax.random.normal(jax.random.PRNGKey(1), (256, 12, 16))
+target = jnp.cumsum(xs, axis=1)[..., :16] * 0.2  # running-sum task
+
+
+def task_loss(p, qat=False):
+    ys, _ = lstm.lstm_layer(p, cfg, xs, qat=qat)
+    return jnp.mean(jnp.square(ys[..., :16] - target))
+
+
+grad_fn = jax.jit(jax.value_and_grad(lambda p: task_loss(p)))
+for i in range(120):
+    l, g = grad_fn(params)
+    params = jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, params, g)
+print(f"float task loss: {float(task_loss(params)):.5f}")
+
+
+def integer_loss(p, calib_samples):
+    col = TapCollector()
+    lstm.lstm_layer(p, cfg, xs[:calib_samples], collector=col)
+    stats = Stats()
+    stats.merge(jax.device_get(col.snapshot()))
+    arrays, spec = recipe.quantize_lstm_layer(p, cfg, stats)
+    xs_q = quant_lstm.quantize_input(xs, spec.s_x, spec.zp_x)
+    ys_q, _ = quant_lstm.quant_lstm_layer(arrays, spec, xs_q)
+    ys = quant_lstm.dequantize_output(ys_q, spec.s_h, spec.zp_h_out)
+    return float(jnp.mean(jnp.square(ys[..., :16] - target)))
+
+
+print(f"PTQ (256-sample calibration): {integer_loss(params, 256):.5f}")
+print(f"PTQ (8-sample calibration):   {integer_loss(params, 8):.5f}"
+      "   <- the paper's '100 utterances suffice' finding")
+
+# QAT fine-tune: simulate quantization noise in training (fig 16 graph)
+qat_params = params
+qat_grad = jax.jit(jax.value_and_grad(lambda p: task_loss(p, qat=True)))
+for i in range(40):
+    l, g = qat_grad(qat_params)
+    qat_params = jax.tree_util.tree_map(lambda a, b: a - 0.02 * b,
+                                        qat_params, g)
+print(f"QAT then integer conversion:  {integer_loss(qat_params, 64):.5f}")

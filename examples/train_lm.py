@@ -1,0 +1,76 @@
+"""End-to-end driver: train a ~100M-param transformer LM with the full
+production loop (sharded step, async checkpoints, watchdog, restart).
+
+Default invocation runs a scaled-down 30-second demo; pass --full for the
+real ~100M/300-step run (CPU-hours on this host; minutes on one TPU chip):
+
+    PYTHONPATH=src python examples/train_lm.py [--full]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import model_zoo
+from repro.optim.optimizers import OptConfig
+from repro.runtime.fault import StepWatchdog
+from repro.runtime.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    if args.full:  # ~100M params
+        cfg = ArchConfig(name="lm-100m", family="dense", n_layers=10,
+                         d_model=640, n_heads=10, n_kv_heads=10, head_dim=64,
+                         d_ff=2560, vocab_size=32768, shard_profile="tiny")
+        steps, batch, seq = 300, 16, 256
+    else:
+        cfg = ArchConfig(name="lm-demo", family="dense", n_layers=4,
+                         d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+                         d_ff=512, vocab_size=2048, shard_profile="tiny",
+                         remat="none")
+        steps, batch, seq = 60, 8, 64
+
+    bundle = model_zoo.build(cfg)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                  global_batch=batch))
+    art = make_train_step(bundle, None, OptConfig(
+        lr=1e-2, warmup_steps=10, total_steps=steps))
+    params, _ = bundle.init(jax.random.PRNGKey(0))
+    n = model_zoo.count_params(params)
+    print(f"model: {cfg.name} ({n/1e6:.1f}M params), {steps} steps")
+    opt = art.init_opt(params)
+    ckpt = CheckpointManager(args.ckpt_dir, keep_k=2)
+    start = ckpt.latest_step() or 0
+    if start:
+        (params, opt), _ = ckpt.restore(start, (params, opt))
+        print(f"resumed from step {start}")
+    wd = StepWatchdog()
+    for step, raw in data.iterate(start):
+        if step >= steps:
+            break
+        batch_d = {k: jnp.asarray(v) for k, v in raw.items()}
+        t0 = time.time()
+        params, opt, m = art.step_fn(params, opt, batch_d)
+        verdict = wd.observe(time.time() - t0)
+        if step % 10 == 0:
+            print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
+                  f"lr {float(m['lr']):.2e}  [{verdict}]")
+        if (step + 1) % 50 == 0:
+            ckpt.save(step + 1, (params, opt))
+    ckpt.wait()
+    print(f"done; stragglers {wd.stragglers}/{wd.steps}; "
+          f"checkpoints at {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

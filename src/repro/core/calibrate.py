@@ -1,0 +1,109 @@
+"""Statistics collection for quantization (paper sec 4).
+
+Two supported modes:
+
+* **Post-training** (the paper's headline result): run float inference on a
+  small representative dataset (the paper shows 100 utterances suffice) and
+  record per-tensor min/max.  Models expose a ``taps`` side-channel: when a
+  ``TapCollector`` is passed through the forward pass, every quantization-
+  relevant intermediate registers itself under a stable name.
+
+* **QAT**: the same taps drive ``fake_quant`` during training so the scales
+  are learned under simulated quantization noise; the training graph keeps
+  input and recurrent components un-concatenated so they carry separate
+  scales (paper fig 16).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TapCollector:
+    """Records min/max of named intermediates during a traced forward pass.
+
+    The same object can be reused across jit invocations; ``snapshot`` returns
+    the (device) stats of the latest call and ``merge`` folds them into a
+    running numpy aggregate.
+    """
+
+    def __init__(self):
+        self.taps: Dict[str, Tuple[jax.Array, jax.Array]] = {}
+
+    def tap(self, name: str, x: jax.Array) -> jax.Array:
+        lo = jnp.min(x).astype(jnp.float32)
+        hi = jnp.max(x).astype(jnp.float32)
+        if name in self.taps:
+            plo, phi = self.taps[name]
+            lo = jnp.minimum(lo, plo)
+            hi = jnp.maximum(hi, phi)
+        self.taps[name] = (lo, hi)
+        return x
+
+    def snapshot(self) -> Dict[str, Tuple[jax.Array, jax.Array]]:
+        return dict(self.taps)
+
+
+class Stats:
+    """Running numpy min/max aggregate keyed by tap name."""
+
+    def __init__(self):
+        self.ranges: Dict[str, Tuple[float, float]] = {}
+
+    def merge(self, taps: Dict[str, Tuple[jax.Array, jax.Array]]) -> None:
+        for name, (lo, hi) in taps.items():
+            lo = float(lo)
+            hi = float(hi)
+            if name in self.ranges:
+                plo, phi = self.ranges[name]
+                lo, hi = min(lo, plo), max(hi, phi)
+            self.ranges[name] = (lo, hi)
+
+    def range(self, name: str) -> Tuple[float, float]:
+        if name not in self.ranges:
+            raise KeyError(
+                f"no calibration stats for tap '{name}'; have {sorted(self.ranges)}"
+            )
+        return self.ranges[name]
+
+    def max_abs(self, name: str) -> float:
+        lo, hi = self.range(name)
+        return max(abs(lo), abs(hi))
+
+    def to_dict(self) -> Dict[str, Tuple[float, float]]:
+        return dict(self.ranges)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Tuple[float, float]]) -> "Stats":
+        s = cls()
+        s.ranges = {k: (float(v[0]), float(v[1])) for k, v in d.items()}
+        return s
+
+
+def calibrate(
+    apply_fn: Callable,
+    params,
+    batches,
+    num_batches: Optional[int] = None,
+) -> Stats:
+    """Run ``apply_fn(params, batch, collector)`` over a calibration set.
+
+    ``apply_fn`` must route the collector's ``tap`` through the model.  The
+    paper's finding: a fixed ~100-sample set is enough for negligible loss.
+    """
+    stats = Stats()
+
+    @jax.jit
+    def _one(params, batch):
+        collector = TapCollector()
+        apply_fn(params, batch, collector)
+        return collector.snapshot()
+
+    for i, batch in enumerate(batches):
+        if num_batches is not None and i >= num_batches:
+            break
+        stats.merge(jax.device_get(_one(params, batch)))
+    return stats

@@ -1,0 +1,61 @@
+"""Quantization-aware training: straight-through fake quantization (sec 4).
+
+The paper's QAT graph rewrite (fig 16) requires the input and recurrent
+matmul components to be *un-concatenated* so each carries its own fake-quant
+scale; our LSTM keeps W and R separate by construction, so QAT is just a
+matter of wrapping tensors in ``fake_quant`` at the recipe's tap points.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _ste(x: jax.Array, xq: jax.Array) -> jax.Array:
+    """Straight-through estimator: forward xq, backward identity."""
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+def fake_quant_symmetric(
+    x: jax.Array,
+    bits: int = 8,
+    per_channel_axis: Optional[int] = None,
+    pot: bool = False,
+) -> jax.Array:
+    """Symmetric fake quant with dynamically observed max-abs (QAT style)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    if per_channel_axis is None:
+        max_abs = jnp.max(jnp.abs(x))
+    else:
+        axes = tuple(i for i in range(x.ndim) if i != per_channel_axis % x.ndim)
+        max_abs = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    max_abs = jnp.maximum(max_abs, 1e-8)
+    if pot:
+        max_abs = 2.0 ** jnp.ceil(jnp.log2(max_abs))
+        scale = max_abs / (qmax + 1.0)
+    else:
+        scale = max_abs / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return _ste(x, q * scale)
+
+
+def fake_quant_asymmetric(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Asymmetric fake quant with nudged zero point (paper sec 3.2.4)."""
+    qmin = float(-(2 ** (bits - 1)))
+    qmax = float(2 ** (bits - 1) - 1)
+    t_min = jnp.minimum(jnp.min(x), 0.0)
+    t_max = jnp.maximum(jnp.max(x), 0.0)
+    scale = jnp.maximum((t_max - t_min) / (qmax - qmin), 1e-8)
+    zp = jnp.clip(jnp.round(qmin - t_min / scale), qmin, qmax)  # nudged
+    q = jnp.clip(jnp.round(x / scale) + zp, qmin, qmax)
+    return _ste(x, (q - zp) * scale)
+
+
+def fake_quant_q(x: jax.Array, fractional_bits: int, bits: int = 16) -> jax.Array:
+    """Fake quant onto a fixed Q_{m.n} grid (e.g. Q3.12 gate inputs)."""
+    scale = 2.0 ** (-fractional_bits)
+    qmax = float(2 ** (bits - 1) - 1)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return _ste(x, q * scale)

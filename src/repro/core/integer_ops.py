@@ -1,0 +1,190 @@
+"""Integer-only tensor ops: matmul, LayerNorm, RMSNorm, softmax.
+
+These are the XLA-path implementations (pure jnp on integer dtypes) of the
+paper's building blocks; the Pallas kernels in ``repro/kernels`` implement the
+same contracts with explicit VMEM tiling and are validated against these.
+
+Everything here obeys the paper's three principles (sec 3):
+  * no floating-point arithmetic in the traced path,
+  * no inner-loop branching (masks/selects only),
+  * no lookup tables (barrel-shifted exponentials instead).
+
+LayerNorm statistics are computed *exactly* (the paper's eq 13-16 semantics)
+without any int64 tensor: n*Sum(q^2) - Sum(q)^2 is carried as uint32 limb
+pairs and fed to the integer Newton-Raphson rsqrt.  See DESIGN.md "TPU
+adaptation" for why this replaces TFLite's int64 accumulators.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import fixedpoint as fp
+
+
+def matmul_i8_i32(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 matmul (... k) @ (k, n).
+
+    Uses the MXU's native int8 path on TPU via preferred_element_type.
+    Safe accumulation depth 2**15 for int8 operands into int32 (sec 3.1.1).
+    """
+    assert x_q.dtype == jnp.int8 and w_q.dtype == jnp.int8
+    return jax.lax.dot_general(
+        x_q,
+        w_q,
+        (((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def matmul_i16_elementwise(a_q: jax.Array, b_q: jax.Array) -> jax.Array:
+    """int16 (x) int16 -> int32 elementwise product (peephole, sec 3.2.3)."""
+    return a_q.astype(jnp.int32) * b_q.astype(jnp.int32)
+
+
+def fold_zero_point(w_q_i8: jax.Array, x_zero_point: int, bias_q: Optional[jax.Array]) -> jax.Array:
+    """Deployment optimization (sec 6): fold Sum_k W[k,:] * zp into the bias.
+
+    With this, the runtime kernel treats both operands as symmetric:
+    ``W(x + zp) + b == Wx + (W zp + b) == Wx + b'``.
+    """
+    col_sum = jnp.sum(w_q_i8.astype(jnp.int32), axis=0)
+    folded = col_sum * jnp.int32(x_zero_point)
+    if bias_q is not None:
+        folded = folded + bias_q.astype(jnp.int32)
+    return folded
+
+
+# ---------------------------------------------------------------------------
+# Exact integer statistics via uint32 limbs
+# ---------------------------------------------------------------------------
+
+
+def _row_stats_limbs(q: jax.Array) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Return (sum_q, sum_q2 as u64 limbs) reduced over the last axis.
+
+    Exact for row length n <= 2**14 and |q| <= 2**15 (int16 inputs widened).
+    """
+    n = q.shape[-1]
+    assert n <= (1 << 14), f"integer norm supports rows up to 16384, got {n}"
+    q32 = q.astype(jnp.int32)
+    sum_q = jnp.sum(q32, axis=-1)  # |.| <= n * 2**15 <= 2**29
+    q2 = (q32 * q32).astype(jnp.uint32)  # <= 2**30, exact
+    hi16 = q2 >> 16  # <= 2**14
+    lo16 = q2 & jnp.uint32(0xFFFF)
+    sum_hi = jnp.sum(hi16.astype(jnp.int32), axis=-1).astype(jnp.uint32)  # <= 2**28
+    sum_lo = jnp.sum(lo16.astype(jnp.int32), axis=-1).astype(jnp.uint32)  # <= 2**30
+    # sum_q2 = sum_hi * 2**16 + sum_lo as u64 limbs
+    hi = sum_hi >> 16
+    lo = sum_hi << 16
+    hi2, lo2 = fp.u64_add(hi, lo, jnp.zeros_like(sum_lo), sum_lo)
+    return sum_q, (hi2, lo2)
+
+
+def integer_layernorm(
+    q: jax.Array,
+    ln_w_q: jax.Array,
+    ln_b_q: jax.Array,
+    out_m0,
+    out_shift,
+    out_qmax: int = 32767,
+) -> jax.Array:
+    """Paper sec 3.2.6: integer-only LayerNorm.
+
+    * ``q``: int16 gate accumulator values (scale cancels in normalization).
+    * normalized value x' is represented with the paper's s' = 2**-10 factor:
+      q' = round(1024 * (q - mean)/sigma) == round(1024*(n*q - Sum q) * rsqrt(V))
+      with V = n*Sum q^2 - (Sum q)^2 carried exactly in u64 limbs.
+    * output: round((q' * L_q + b_q) * out_multiplier), int16.
+      out_multiplier folds 2**-10 * s_L / s_out (computed offline).
+    """
+    n = q.shape[-1]
+    sum_q, (v_hi, v_lo) = _row_stats_limbs(q)
+    # V = n * Sum q^2 - (Sum q)^2   (>= 0 by Cauchy-Schwarz)
+    nhi, nlo = fp.u64_mul_small(v_hi, v_lo, n)
+    abs_sum = jnp.abs(sum_q).astype(jnp.uint32)
+    s_hi, s_lo = fp.u64_from_mul_u32(abs_sum, abs_sum)
+    v_hi2, v_lo2 = fp.u64_sub(nhi, nlo, s_hi, s_lo)
+    # q' = mbqm(n*q - Sum q, 1024 * rsqrt(V))
+    m0, shift = fp.integer_rsqrt_multiplier(v_hi2, v_lo2, extra_pow2=10)
+    dev = q.astype(jnp.int32) * jnp.int32(n) - sum_q[..., None]
+    qprime = fp.multiply_by_quantized_multiplier(dev, m0[..., None], shift[..., None])
+    degenerate = jnp.logical_and(v_hi2 == 0, v_lo2 == 0)[..., None]
+    qprime = jnp.where(degenerate, jnp.int32(0), qprime)
+    qprime = jnp.clip(qprime, -32768, 32767)
+    # y = q' * L + b  (int16*int16 + int32), then rescale to the output scale
+    acc = qprime * ln_w_q.astype(jnp.int32)
+    acc = fp.saturating_add_i32(acc, ln_b_q.astype(jnp.int32))
+    out = fp.multiply_by_quantized_multiplier(acc, out_m0, out_shift)
+    return jnp.clip(out, -out_qmax - 1, out_qmax).astype(jnp.int16)
+
+
+def integer_rmsnorm(
+    q: jax.Array,
+    w_q: jax.Array,
+    out_m0,
+    out_shift,
+    eps_guard: bool = True,
+) -> jax.Array:
+    """RMSNorm generalization of the paper's integer LayerNorm (beyond-paper).
+
+    q / rms(q) = q * sqrt(n) * rsqrt(Sum q^2); the sqrt(n) and the s'=2**-10
+    factor fold into the rsqrt multiplier, and 2**-10 * s_w / s_out folds into
+    (out_m0, out_shift) exactly as in integer_layernorm.
+    """
+    n = q.shape[-1]
+    _, (v_hi, v_lo) = _row_stats_limbs(q)
+    m0, shift = fp.integer_rsqrt_multiplier(v_hi, v_lo, extra_pow2=10)
+    # fold sqrt(n) (static) into the multiplier mantissa
+    sn_m0, sn_shift = fp.quantize_multiplier(math.sqrt(n))
+    m0 = fp.saturating_rounding_doubling_high_mul(m0, jnp.int32(sn_m0))
+    shift = shift + jnp.int32(sn_shift)
+    qprime = fp.multiply_by_quantized_multiplier(
+        q.astype(jnp.int32), m0[..., None], shift[..., None]
+    )
+    if eps_guard:
+        degenerate = jnp.logical_and(v_hi == 0, v_lo == 0)[..., None]
+        qprime = jnp.where(degenerate, jnp.int32(0), qprime)
+    qprime = jnp.clip(qprime, -32768, 32767)
+    acc = qprime * w_q.astype(jnp.int32)
+    out = fp.multiply_by_quantized_multiplier(acc, out_m0, out_shift)
+    return jnp.clip(out, -32768, 32767).astype(jnp.int16)
+
+
+def integer_softmax(
+    logits_q: jax.Array,
+    in_m0: int,
+    in_shift: int,
+    axis: int = -1,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """int16/int32 logits -> int16 Q0.15 probabilities (beyond-paper).
+
+    TFLite-style 16-bit softmax built from the paper's building blocks:
+    max-subtraction in integers, barrel-shifted exp to Q0.31, integer
+    Newton reciprocal of the sum.  (in_m0, in_shift) rescales the logits'
+    scale to Q5.26 so that exp_on_negative_values can consume them.
+    """
+    assert axis == -1
+    x = logits_q.astype(jnp.int32)
+    if mask is not None:
+        neg = jnp.int32(fp.INT32_MIN // 2)
+        x = jnp.where(mask, x, neg)
+    x_max = jnp.max(x, axis=-1, keepdims=True)
+    diff = x - x_max  # <= 0
+    scaled = fp.multiply_by_quantized_multiplier(diff, in_m0, in_shift)
+    scaled = jnp.maximum(scaled, jnp.int32(-(1 << 31) + 1))
+    e = fp.exp_on_negative_values(scaled, 5)  # Q0.31
+    if mask is not None:
+        e = jnp.where(mask, e, jnp.int32(0))
+    n = logits_q.shape[-1]
+    k = max(int(math.ceil(math.log2(max(n, 2)))), 1)
+    e_s = e >> k
+    denom = jnp.sum(e_s, axis=-1)  # < 2**31
+    denom = jnp.maximum(denom, 1)
+    rm0, rshift = fp.integer_recip_multiplier(denom, extra_pow2=15)
+    p = fp.multiply_by_quantized_multiplier(e_s, rm0[..., None], rshift[..., None])
+    return jnp.clip(p, 0, 32767).astype(jnp.int16)

@@ -1,0 +1,170 @@
+"""Quantization dtypes, specs and quantize/dequantize transforms.
+
+Encodes the paper's quantization fundamentals (sec 3.1):
+
+* linear affine quantization with optionally nudged zero points [Jacob et al.],
+* symmetric (weights) vs asymmetric (activations) ranges,
+* power-of-two (POT) scales and the Q_{m.n} format for the LSTM cell state
+  (sec 3.1.2 / 3.2.2).
+
+A ``QTensor`` is a pytree of integer values plus a static ``QuantSpec``; the
+spec rides in the pytree's aux data so jitted functions specialize on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fixedpoint as fp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of a quantized tensor's arithmetic type."""
+
+    bits: int  # 8, 16 or 32
+    scale: float  # real value = scale * (q - zero_point)
+    zero_point: int = 0
+    symmetric: bool = True
+    pot: bool = False  # scale is a power of two (Q_{m.n} interpretable)
+
+    @property
+    def dtype(self):
+        return {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[self.bits]
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        # symmetric quantization restricts to +/-(2^(n-1)-1) (paper: [-127,127])
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def q_format(self) -> Tuple[int, int]:
+        """(m, n) of Q_{m.n} for POT scales: scale == 2**-n, m = bits-1-n."""
+        if not self.pot:
+            raise ValueError("Q_{m.n} format only defined for POT scales")
+        n = -int(round(math.log2(self.scale)))
+        return self.bits - 1 - n, n
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """Quantized tensor: integer values + static QuantSpec (pytree)."""
+
+    __slots__ = ("values", "spec")
+
+    def __init__(self, values, spec: QuantSpec):
+        self.values = values
+        self.spec = spec
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequantize(self, dtype=jnp.float32):
+        v = self.values.astype(dtype)
+        if self.spec.zero_point:
+            v = v - self.spec.zero_point
+        return v * self.spec.scale
+
+    def tree_flatten(self):
+        return (self.values,), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, children):
+        return cls(children[0], spec)
+
+    def __repr__(self):
+        return f"QTensor(shape={tuple(self.values.shape)}, spec={self.spec})"
+
+
+# ---------------------------------------------------------------------------
+# Scale computation (python/numpy side, offline).
+# ---------------------------------------------------------------------------
+
+
+def symmetric_scale(max_abs: float, bits: int) -> float:
+    """Paper: s = max(|T|) / (2**(bits-1) - 1); e.g. max/127, max/32767."""
+    qmax = 2 ** (bits - 1) - 1
+    max_abs = float(max_abs)
+    if max_abs == 0.0:
+        max_abs = 1e-8
+    return max_abs / qmax
+
+
+def asymmetric_scale_zp(t_min: float, t_max: float, bits: int) -> Tuple[float, int]:
+    """Paper: s = range / (2**bits - 1) with nudged zero point [Jacob et al.].
+
+    Guarantees float 0.0 maps exactly to an integer zero point.
+    """
+    t_min = min(float(t_min), 0.0)
+    t_max = max(float(t_max), 0.0)
+    if t_max == t_min:
+        t_max = t_min + 1e-8
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    scale = (t_max - t_min) / (qmax - qmin)
+    zp_real = qmin - t_min / scale
+    zero_point = int(round(zp_real))
+    zero_point = max(qmin, min(qmax, zero_point))
+    return scale, zero_point
+
+
+def pot_scale_for(max_abs: float, bits: int = 16) -> float:
+    """Extend |max| to the next power of two (paper sec 3.2.2, 'POT(max)').
+
+    Returns scale = POT(max) / 2**(bits-1), a power of two, giving Q_{m.n}.
+    """
+    max_abs = float(max_abs)
+    if max_abs <= 0:
+        max_abs = 1.0
+    pot = 2.0 ** math.ceil(math.log2(max_abs)) if max_abs > 0 else 1.0
+    pot = max(pot, 2.0 ** -20)
+    return pot / (2 ** (bits - 1))
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize (traceable; used by PTQ converters and fake-quant).
+# ---------------------------------------------------------------------------
+
+
+def quantize(x, spec: QuantSpec) -> QTensor:
+    inv = 1.0 / spec.scale
+    q = jnp.round(jnp.asarray(x, jnp.float32) * inv) + spec.zero_point
+    lo = float(spec.qmin if not spec.symmetric else -spec.qmax)
+    q = jnp.clip(q, lo, float(spec.qmax))
+    return QTensor(q.astype(spec.dtype), spec)
+
+
+def quantize_symmetric(x: np.ndarray, bits: int, pot: bool = False) -> QTensor:
+    max_abs = float(np.max(np.abs(x))) if x.size else 0.0
+    scale = pot_scale_for(max_abs, bits) if pot else symmetric_scale(max_abs, bits)
+    spec = QuantSpec(bits=bits, scale=scale, zero_point=0, symmetric=True, pot=pot)
+    return quantize(x, spec)
+
+
+def quantize_asymmetric(x: np.ndarray, bits: int) -> QTensor:
+    t_min = float(np.min(x)) if x.size else 0.0
+    t_max = float(np.max(x)) if x.size else 0.0
+    scale, zp = asymmetric_scale_zp(t_min, t_max, bits)
+    spec = QuantSpec(bits=bits, scale=scale, zero_point=zp, symmetric=False)
+    return quantize(x, spec)
+
+
+def quantize_bias_i32(b: np.ndarray, scale: float) -> QTensor:
+    """Bias quantized to int32 at a derived scale (paper sec 3.2.4)."""
+    spec = QuantSpec(bits=32, scale=scale, zero_point=0, symmetric=True)
+    q = np.clip(np.round(np.asarray(b, np.float64) / scale), -(2**31 - 1), 2**31 - 1)
+    return QTensor(jnp.asarray(q, jnp.int32), spec)
+
+
+def requantize_multiplier(s_in: float, s_out: float) -> Tuple[int, int]:
+    """Effective rescale s_eff = s_in / s_out as (m0, shift) ints."""
+    return fp.quantize_multiplier(s_in / s_out)

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: integer-only LayerNorm (paper sec 3.2.6, eqs 13-16).
+
+Row-blocked: each grid step owns (block_rows, n) in VMEM, computes the exact
+integer statistics (u64 carried as uint32 limb pairs -- no int64 on TPU),
+the Newton-Raphson integer rsqrt, the s' = 2**-10 normalization, and the
+L (.) x' + b affine with its fixed-point output rescale.
+
+The row length n must fit VMEM: n <= 16384 int16 elements per row is the
+library-wide contract (asserted), well within a v5e core's 128 MiB/8 VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import integer_ops as iops
+
+
+def _ln_kernel(q_ref, lw_ref, lb_ref, out_ref, *, out_m0: int, out_shift: int):
+    q = q_ref[...]
+    out_ref[...] = iops.integer_layernorm(
+        q, lw_ref[...], lb_ref[...], out_m0, out_shift
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("out_m0", "out_shift", "block_rows", "interpret"),
+)
+def int_layernorm_pallas(
+    q: jax.Array,  # (B, n) int16
+    ln_w_q: jax.Array,  # (n,) int16
+    ln_b_q: jax.Array,  # (n,) int32
+    *,
+    out_m0: int,
+    out_shift: int,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    B, n = q.shape
+    br = min(block_rows, B)
+    assert B % br == 0, (B, br)
+    kernel = functools.partial(_ln_kernel, out_m0=out_m0, out_shift=out_shift)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n), jnp.int16),
+        interpret=interpret,
+    )(q, ln_w_q.reshape(1, n), ln_b_q.reshape(1, n))

@@ -1,0 +1,101 @@
+"""Jitted public wrappers for the Pallas kernels with backend dispatch.
+
+Backends:
+  * ``xla``              -- pure-jnp path (default on CPU; what the multi-pod
+                            dry-run lowers so cost_analysis sees real FLOPs).
+  * ``pallas``           -- compiled Pallas kernels (TPU runtime target).
+  * ``pallas_interpret`` -- Pallas interpreter (CPU correctness validation).
+
+Select globally via ``set_backend`` or per-call with ``backend=``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .int8_matmul import int8_matmul_pallas
+from .int_layernorm import int_layernorm_pallas
+from .quant_lstm_cell import quant_lstm_cell_pallas
+
+_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "xla")
+_VALID = ("xla", "pallas", "pallas_interpret")
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in _VALID, name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _resolve(backend: Optional[str]) -> str:
+    b = backend or _BACKEND
+    assert b in _VALID, b
+    return b
+
+
+def int8_matmul(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    fold: jax.Array,
+    m0: jax.Array,
+    shift: jax.Array,
+    *,
+    out_dtype=jnp.int8,
+    zp_out: int = 0,
+    backend: Optional[str] = None,
+    **block_kw,
+) -> jax.Array:
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.int8_matmul_jnp(
+            x_q, w_q, fold, m0, shift, out_dtype=out_dtype, zp_out=zp_out
+        )
+    return int8_matmul_pallas(
+        x_q,
+        w_q,
+        fold,
+        m0,
+        shift,
+        out_dtype=out_dtype,
+        zp_out=zp_out,
+        interpret=(b == "pallas_interpret"),
+        **block_kw,
+    )
+
+
+def quant_lstm_cell(
+    i16, f16, z16, o16, c_q, *, cell_int_bits, cifg, eff_m, zp_m,
+    backend: Optional[str] = None, **block_kw
+) -> Tuple[jax.Array, jax.Array]:
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.quant_lstm_cell_jnp(
+            i16, f16, z16, o16, c_q,
+            cell_int_bits=cell_int_bits, cifg=cifg, eff_m=eff_m, zp_m=zp_m,
+        )
+    return quant_lstm_cell_pallas(
+        i16, f16, z16, o16, c_q,
+        cell_int_bits=cell_int_bits, cifg=cifg, eff_m=eff_m, zp_m=zp_m,
+        interpret=(b == "pallas_interpret"), **block_kw,
+    )
+
+
+def int_layernorm(
+    q, ln_w_q, ln_b_q, *, out_m0: int, out_shift: int,
+    backend: Optional[str] = None, **block_kw
+) -> jax.Array:
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.int_layernorm_jnp(q, ln_w_q, ln_b_q, out_m0, out_shift)
+    return int_layernorm_pallas(
+        q, ln_w_q, ln_b_q, out_m0=out_m0, out_shift=out_shift,
+        interpret=(b == "pallas_interpret"), **block_kw,
+    )

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: fused integer LSTM element-wise cell update.
+
+Covers the paper's fig 10-12 path: gate activations (sigmoid/tanh via the
+gemmlowp barrel-shifter math, sec 3.2.1), the cell update
+``c_t = shift(i*z, 30-n) + shift(f*c, 15)`` (sec 3.2.7) and the hidden-state
+requantize ``m = rescale(o * tanh(c), 2**-30/s_m) + zp`` -- everything between
+the gate matmuls and the projection matmul, in one VMEM-resident pass.
+
+On TPU this fusion matters because the four (B, H) int16 gate tensors and the
+int16 cell state would otherwise make five HBM round-trips per step; the
+recurrent step is memory-bound, so fusing is a direct paper-motivated win.
+
+Inputs are the already-rescaled int16 Q3.12 gate pre-activations (the matmuls
+live in ``int8_matmul.py``); CIFG simply omits the ``i`` input (static flag).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import fixedpoint as fp
+
+
+def _cell_kernel(
+    i_ref,
+    f_ref,
+    z_ref,
+    o_ref,
+    c_ref,
+    h_out_ref,
+    c_out_ref,
+    *,
+    cell_int_bits: int,
+    cifg: bool,
+    eff_m: Tuple[int, int],
+    zp_m: int,
+):
+    n_c = 15 - cell_int_bits
+    f_act = fp.sigmoid_q15(f_ref[...], 3).astype(jnp.int32)
+    z_act = fp.tanh_q15(z_ref[...], 3).astype(jnp.int32)
+    if cifg:
+        i_act = jnp.minimum(jnp.int32(32768) - f_act, jnp.int32(32767))
+    else:
+        i_act = fp.sigmoid_q15(i_ref[...], 3).astype(jnp.int32)
+    iz = i_act * z_act  # Q0.30
+    fc = f_act * c_ref[...].astype(jnp.int32)
+    c_new32 = fp.saturating_add_i32(
+        fp.rounding_divide_by_pot(iz, 30 - n_c),
+        fp.rounding_divide_by_pot(fc, 15),
+    )
+    c_new = fp.saturate_i16(c_new32)
+    o_act = fp.sigmoid_q15(o_ref[...], 3).astype(jnp.int32)
+    g_c = fp.tanh_q15(c_new, cell_int_bits).astype(jnp.int32)
+    m_raw = o_act * g_c  # Q0.30
+    m_q = fp.multiply_by_quantized_multiplier(m_raw, eff_m[0], eff_m[1])
+    h_out_ref[...] = fp.saturate_i8(m_q + jnp.int32(zp_m))
+    c_out_ref[...] = c_new
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "cell_int_bits",
+        "cifg",
+        "eff_m",
+        "zp_m",
+        "block_b",
+        "block_h",
+        "interpret",
+    ),
+)
+def quant_lstm_cell_pallas(
+    i16: jax.Array,  # (B, H) int16 Q3.12 (ignored when cifg)
+    f16: jax.Array,
+    z16: jax.Array,
+    o16: jax.Array,
+    c_q: jax.Array,  # (B, H) int16 Q_{m.15-m}
+    *,
+    cell_int_bits: int,
+    cifg: bool,
+    eff_m: Tuple[int, int],
+    zp_m: int,
+    block_b: int = 8,
+    block_h: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (m int8, c_new int16).  Elementwise: tiles freely over (B, H)."""
+    B, H = f16.shape
+    bb, bh = min(block_b, B), min(block_h, H)
+    assert B % bb == 0 and H % bh == 0, (B, H, bb, bh)
+    grid = (B // bb, H // bh)
+    spec = pl.BlockSpec((bb, bh), lambda i, j: (i, j))
+    kernel = functools.partial(
+        _cell_kernel,
+        cell_int_bits=cell_int_bits,
+        cifg=cifg,
+        eff_m=eff_m,
+        zp_m=zp_m,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H), jnp.int8),
+            jax.ShapeDtypeStruct((B, H), jnp.int16),
+        ],
+        interpret=interpret,
+    )(i16, f16, z16, o16, c_q)

@@ -1,0 +1,113 @@
+"""Pure oracles for every Pallas kernel.
+
+Two tiers:
+  * ``*_jnp``: the XLA-path implementations from ``repro.core`` (these are
+    themselves validated against numpy), used for allclose kernel tests.
+  * ``*_np``:  bit-faithful numpy/int64 references implementing the paper's
+    published equations directly (TFLite semantics), used to prove the
+    limb-based TPU adaptations are exact.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fp
+from repro.core import integer_ops as iops
+
+
+# --- int8 matmul -----------------------------------------------------------
+
+
+def int8_matmul_jnp(x_q, w_q, fold, m0, shift, out_dtype=jnp.int8, zp_out=0):
+    acc = iops.matmul_i8_i32(x_q, w_q) + fold
+    if out_dtype == jnp.int32:
+        return acc
+    y = fp.multiply_by_quantized_multiplier(acc, m0, shift) + jnp.int32(zp_out)
+    info = jnp.iinfo(out_dtype)
+    return jnp.clip(y, info.min, info.max).astype(out_dtype)
+
+
+def int8_matmul_np(x_q, w_q, fold):
+    """Exact int64 accumulation oracle (pre-rescale)."""
+    return (
+        x_q.astype(np.int64) @ w_q.astype(np.int64) + fold.astype(np.int64)
+    ).astype(np.int64)
+
+
+# --- fused LSTM cell -------------------------------------------------------
+
+
+def quant_lstm_cell_jnp(
+    i16, f16, z16, o16, c_q, *, cell_int_bits, cifg, eff_m, zp_m
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    n_c = 15 - cell_int_bits
+    f_act = fp.sigmoid_q15(f16, 3).astype(jnp.int32)
+    z_act = fp.tanh_q15(z16, 3).astype(jnp.int32)
+    if cifg:
+        i_act = jnp.minimum(jnp.int32(32768) - f_act, jnp.int32(32767))
+    else:
+        i_act = fp.sigmoid_q15(i16, 3).astype(jnp.int32)
+    c_new = fp.saturate_i16(
+        fp.saturating_add_i32(
+            fp.rounding_divide_by_pot(i_act * z_act, 30 - n_c),
+            fp.rounding_divide_by_pot(f_act * c_q.astype(jnp.int32), 15),
+        )
+    )
+    o_act = fp.sigmoid_q15(o16, 3).astype(jnp.int32)
+    g_c = fp.tanh_q15(c_new, cell_int_bits).astype(jnp.int32)
+    m_q = fp.saturate_i8(
+        fp.multiply_by_quantized_multiplier(o_act * g_c, eff_m[0], eff_m[1])
+        + jnp.int32(zp_m)
+    )
+    return m_q, c_new
+
+
+# --- integer layernorm -----------------------------------------------------
+
+
+def int_layernorm_jnp(q, lw, lb, out_m0, out_shift):
+    return iops.integer_layernorm(q, lw, lb, out_m0, out_shift)
+
+
+def _mbqm_np(x: np.ndarray, m0: int, shift: int) -> np.ndarray:
+    """numpy int64 MultiplyByQuantizedMultiplier (gemmlowp semantics)."""
+    x = x.astype(np.int64)
+    left = max(shift, 0)
+    right = max(-shift, 0)
+    x = np.clip(x << left, -(2**31), 2**31 - 1)
+    ab = x * int(m0)
+    nudge = np.where(ab >= 0, 1 << 30, 1 - (1 << 30))
+    y = (ab + nudge) // (1 << 31)
+    y = np.where(ab + nudge < 0, -((-(ab + nudge)) >> 31), (ab + nudge) >> 31)
+    if right:
+        mask = (1 << right) - 1
+        rem = y & mask
+        thr = (mask >> 1) + (y < 0)
+        y = (y >> right) + (rem > thr)
+    return y
+
+
+def int_layernorm_np(q, lw, lb, out_m0: int, out_shift: int) -> np.ndarray:
+    """Paper eqs 13-16 with exact int64 statistics (TFLite-style oracle).
+
+    Uses float128-free integer math for V = n*Sum(q^2) - Sum(q)^2 and a
+    high-precision rsqrt; output differs from the limb/Newton JAX path by at
+    most 1 LSB of q' (tested).
+    """
+    q = q.astype(np.int64)
+    n = q.shape[-1]
+    sum_q = q.sum(-1, keepdims=True)
+    sum_q2 = (q * q).sum(-1, keepdims=True)
+    V = n * sum_q2 - sum_q * sum_q
+    dev = n * q - sum_q
+    with np.errstate(divide="ignore", invalid="ignore"):
+        inv = np.where(V > 0, 1.0 / np.sqrt(V.astype(np.float64)), 0.0)
+    qprime = np.round(1024.0 * dev * inv).astype(np.int64)
+    qprime = np.clip(qprime, -32768, 32767)
+    acc = qprime * lw.astype(np.int64) + lb.astype(np.int64)
+    acc = np.clip(acc, -(2**31), 2**31 - 1)
+    out = _mbqm_np(acc, out_m0, out_shift)
+    return np.clip(out, -32768, 32767).astype(np.int16)

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model"); the pod
+axis carries data parallelism across the DCN/ICI-pod boundary.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state); the dry-run entrypoint sets the host-device-count XLA flag
+before any jax import.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; run "
+            "under launch/dryrun.py which forces 512 host devices")
+    # more devices than needed (e.g. 512 present, single-pod 256 wanted)
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many local devices exist (tests)."""
+    import jax
+    from jax.sharding import Mesh
+
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        return None
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)

@@ -1,0 +1,276 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bandwidth
+    collective = wire_bytes_per_device / ICI_bandwidth
+
+HLO FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device, post-SPMD
+partitioning).  Collective wire bytes are parsed from ``compiled.as_text()``
+using ring-algorithm cost models:
+    all-reduce          2 * size * (n-1)/n
+    all-gather          size_out * (n-1)/n
+    reduce-scatter      size_out * (n-1)          (== input*(n-1)/n)
+    all-to-all          size * (n-1)/n
+    collective-permute  size
+
+Hardware constants (TPU v5e, per chip):
+    197 TFLOP/s bf16  (394 TOP/s int8), 819 GB/s HBM,
+    ICI: 4 links x ~50 GB/s; same-axis ring uses 2 links bidirectionally
+    -> 100 GB/s effective per chip; cross-pod (the "pod" axis) uses DCN at
+    ~25 GB/s per chip (documented assumption).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 100e9  # 2 x 50 GB/s links per ring axis
+DCN_BW = 25e9  # pod axis
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_TUPLE_COLL_RE = re.compile(
+    r"=\s+\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_kind_bytes: Dict[str, float]
+    by_kind_count: Dict[str, int]
+    wire_bytes: float  # ring-model wire bytes per device (ICI-equivalent)
+    pod_wire_bytes: float  # portion crossing the pod axis (DCN)
+
+
+def parse_collectives(hlo_text: str, n_pods: int = 1,
+                      devices_per_pod: int = 256,
+                      region_trip_hint: int = 1) -> CollectiveStats:
+    """Collectives inside non-ENTRY computations (scan/while bodies) execute
+    ``region_trip_hint`` times but appear once in the HLO text; the dry-run
+    unrolls the layer dimension so the hint only covers inner loops."""
+    by_bytes: Dict[str, float] = {}
+    by_count: Dict[str, int] = {}
+    wire = 0.0
+    pod_wire = 0.0
+    in_entry = True
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY "):
+            in_entry = True
+        elif line and not line[0].isspace() and line.rstrip().endswith("{"):
+            in_entry = False
+        if ("all-reduce" not in line and "all-gather" not in line
+                and "reduce-scatter" not in line and "all-to-all" not in line
+                and "collective-permute" not in line):
+            continue
+        if "-done" in line or "fusion" in line:
+            continue
+        m = _COLL_RE.search(line)
+        sizes: List[int] = []
+        kind = None
+        if m:
+            kind = m.group(3)
+            sizes = [_shape_bytes(m.group(1), m.group(2))]
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if not mt:
+                continue
+            kind = mt.group(2)
+            for part in mt.group(1).split(", "):
+                sm = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", part.strip())
+                if sm:
+                    sizes.append(_shape_bytes(sm.group(1), sm.group(2)))
+        if kind is None or not sizes:
+            continue
+        size = float(sum(sizes))
+        if not in_entry:
+            size *= max(region_trip_hint, 1)
+        # group size n
+        n = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                n = int(gi.group(2))
+        crosses_pod = n > devices_per_pod and n_pods > 1
+        if kind == "all-reduce":
+            w = 2.0 * size * (n - 1) / max(n, 1)
+        elif kind == "all-gather":
+            w = size * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            w = size * (n - 1)
+        elif kind == "all-to-all":
+            w = size * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            w = size
+        by_bytes[kind] = by_bytes.get(kind, 0.0) + w
+        by_count[kind] = by_count.get(kind, 0) + 1
+        wire += w
+        if crosses_pod:
+            # fraction of the ring crossing pods ~ (n_pods-1)/n_pods of hops
+            pod_wire += w / n_pods
+    return CollectiveStats(by_bytes, by_count, wire, pod_wire)
+
+
+def roofline_terms(
+    flops: float,
+    bytes_accessed: float,
+    coll: CollectiveStats,
+    *,
+    int8_compute: bool = False,
+) -> Dict[str, float]:
+    peak = PEAK_FLOPS_INT8 if int8_compute else PEAK_FLOPS_BF16
+    t_compute = flops / peak
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = (coll.wire_bytes - coll.pod_wire_bytes) / ICI_BW + (
+        coll.pod_wire_bytes / DCN_BW)
+    terms = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+    }
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    total = max(t_compute, t_memory, t_coll)
+    terms["roofline_bound_s"] = total
+    terms["roofline_fraction"] = (t_compute / total) if total > 0 else 0.0
+    return terms
+
+
+def model_flops(n_params: int, n_active_params: int, tokens: int,
+                kind: str) -> float:
+    """6*N*D for training, 2*N*D forward-only (N = active params for MoE)."""
+    n = n_active_params or n_params
+    if kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+def _triangular_flash() -> bool:
+    import os
+
+    return os.environ.get("REPRO_TRIANGULAR_FLASH", "0") == "1"
+
+
+def attention_flops(cfg, seq_len: int, batch: int, kind: str,
+                    executed: bool = True) -> float:
+    """Analytic attention FLOPs (QK^T + PV), excluded from 6N*D/2N*D.
+
+    ``executed=True`` models what the code actually runs: the default flash
+    schedule visits the full rectangular chunk grid (S^2 work for causal);
+    with REPRO_TRIANGULAR_FLASH=1 it runs the triangular schedule (S^2/2).
+    ``executed=False`` returns the *useful* (triangular) FLOPs regardless --
+    used for the useful_ratio numerator.
+    Decode: 2 * 2 * B * H * hd * S_cache per layer (one query position).
+    """
+    if cfg.n_heads == 0:
+        return 0.0  # attention-free (mamba)
+    H, hd = cfg.n_heads, cfg.head_dim
+    n_attn_layers = cfg.n_layers
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        n_attn_layers = sum(
+            1 for i in range(cfg.n_layers) if pat[i % len(pat)] == "attn")
+    eff_s = seq_len if cfg.attn_window == 0 else min(seq_len, cfg.attn_window)
+    if kind in ("train", "prefill"):
+        causal_frac = 0.5 if (not executed or _triangular_flash()
+                              or cfg.attn_window > 0) else 1.0
+        per_layer = 4.0 * batch * H * hd * seq_len * eff_s * causal_frac
+        if kind == "train":
+            per_layer *= 3.0  # fwd + bwd(2x)
+    else:
+        per_layer = 4.0 * batch * H * hd * eff_s
+    return per_layer * n_attn_layers
+
+
+def attention_layer_count(cfg) -> int:
+    if cfg.n_heads == 0:
+        return 0
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        return sum(1 for i in range(cfg.n_layers) if pat[i % len(pat)] == "attn")
+    return cfg.n_layers
+
+
+def inner_scan_corrections(cfg, cell) -> Tuple[float, float]:
+    """(add_flops, add_bytes), GLOBAL, for compute that lives inside inner
+    scans (flash-attention KV chunks, SSM/RG-LRU/LSTM time recurrences) --
+    XLA's cost_analysis counts those bodies once.
+
+    Memory corrections model the TPU-target FUSED kernels (Pallas): attention
+    logits/exp temps stay in VMEM (only Q/K/V/O hit HBM, with K/V re-read per
+    q-chunk pass); recurrences stream inputs once with state resident in VMEM.
+    The XLA fallback path would materialize more -- documented in DESIGN.md.
+    """
+    add_flops = 0.0
+    add_bytes = 0.0
+    B, S, kind = cell.global_batch, cell.seq_len, cell.kind
+    train_mult = 3.0 if kind == "train" else 1.0
+    if kind == "decode":
+        return 0.0, 0.0  # decode is fully unrolled; HLO counts everything
+    if cfg.n_heads:
+        add_flops += attention_flops(cfg, S, B, kind, executed=True)
+        nq = max(S // 512, 1)
+        if _triangular_flash() and cfg.attn_window == 0:
+            nq = max(nq // 2, 1)  # triangular: half the K/V re-read passes
+        eff_s = S if cfg.attn_window == 0 else min(S, cfg.attn_window)
+        l_attn = attention_layer_count(cfg)
+        kv_bytes = 2 * eff_s * cfg.n_kv_heads * cfg.head_dim * 2  # K+V bf16
+        add_bytes += l_attn * B * nq * kv_bytes * train_mult
+    if cfg.family == "ssm":
+        di, n = cfg.d_inner, cfg.d_state
+        add_flops += 7.0 * B * S * di * n * cfg.n_layers * train_mult
+        add_bytes += B * S * (3 * di + 2 * n) * 4 * cfg.n_layers * train_mult
+    if cfg.family == "hybrid":
+        n_rec = cfg.n_layers - attention_layer_count(cfg)
+        add_flops += 8.0 * B * S * cfg.d_rnn * n_rec * train_mult
+        add_bytes += B * S * 3 * cfg.d_rnn * 4 * n_rec * train_mult
+    if cfg.family == "lstm":
+        # per-step gate matmuls live inside the time scan: weights re-read
+        # every step (the memory wall the paper's int8 weights attack)
+        d_h, d_p = cfg.d_rnn, max(cfg.d_rnn * 5 // 16, 8)
+        per_layer_params = 4 * (d_p * d_h + d_p * d_h) + d_h * d_p
+        flops = 2.0 * B * S * per_layer_params * cfg.n_layers
+        add_flops += flops * train_mult
+        add_bytes += (S * per_layer_params * 4 * cfg.n_layers) * train_mult
+    return add_flops, add_bytes
+
+
+def active_params(cfg, n_params: int) -> int:
+    """Approximate active-per-token parameter count for MoE archs."""
+    if cfg.n_experts == 0:
+        return n_params
+    # expert params per layer
+    n_moe_layers = cfg.n_layers - cfg.n_dense_layers
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    total_expert = n_moe_layers * cfg.n_experts * per_expert
+    active_expert = n_moe_layers * (cfg.topk + cfg.n_shared_experts) * per_expert
+    return n_params - total_expert + active_expert

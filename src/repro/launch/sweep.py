@@ -1,0 +1,85 @@
+"""Dry-run sweep driver: every (arch x applicable shape x mesh) cell.
+
+Runs each cell as a subprocess (fresh jax, fresh 512-device flag), resumable
+(skips cells whose JSON already exists).  Ordering: multi-pod scan-mode pass
+first (the deliverable gate), then single-pod roofline baselines.
+
+    PYTHONPATH=src python -m repro.launch.sweep [--only single|multi]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+OUT_DIR = "experiments/dryrun"
+
+
+def cells():
+    from repro.configs.base import applicable_shapes
+    from repro.configs.registry import ASSIGNED, CONFIGS
+
+    for arch in list(ASSIGNED) + ["lstm-rnnt"]:
+        for cell in applicable_shapes(CONFIGS[arch]):
+            yield arch, cell.name
+
+
+def run_one(arch: str, shape: str, mesh: str, layers_mode: str,
+            quant: str = "none", timeout: int = 3000, force: bool = False):
+    tag = f"{arch}__{shape}__{mesh}" + (f"__{quant}" if quant != "none" else "")
+    out = os.path.join(OUT_DIR, tag + ".json")
+    if os.path.exists(out) and not force:
+        try:
+            with open(out) as f:
+                if "error" not in json.load(f):
+                    return "cached", out
+        except Exception:
+            pass
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--layers-mode", layers_mode,
+           "--quant", quant, "--out", out]
+    env = dict(os.environ, PYTHONPATH="src")
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+        status = "ok" if proc.returncode == 0 else "FAIL"
+        if status == "FAIL" and not os.path.exists(out):
+            with open(out, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "error": proc.stderr[-2000:]}, f)
+    except subprocess.TimeoutExpired:
+        status = "TIMEOUT"
+        with open(out, "w") as f:
+            json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                       "error": f"compile timeout {timeout}s"}, f)
+    return f"{status}({time.time() - t0:.0f}s)", out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all", choices=["all", "single", "multi"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+    jobs = []
+    if args.only in ("all", "multi"):
+        # multi-pod coherence pass: scan mode (fast; proves the pod axis)
+        for arch, shape in cells():
+            jobs.append((arch, shape, "multi", "scan"))
+    if args.only in ("all", "single"):
+        # single-pod roofline baselines: auto (unroll / extrapolate)
+        for arch, shape in cells():
+            jobs.append((arch, shape, "single", "auto"))
+    print(f"{len(jobs)} cells")
+    for i, (arch, shape, mesh, mode) in enumerate(jobs):
+        status, out = run_one(arch, shape, mesh, mode, force=args.force)
+        print(f"[{i + 1}/{len(jobs)}] {arch} {shape} {mesh} [{mode}]: {status}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,335 @@
+"""Attention: GQA with RoPE/qk-norm, blockwise (flash-style) softmax, caches.
+
+Three execution paths:
+  * ``flash_attention``  -- blockwise online-softmax over KV chunks (bounded
+    memory; default for prefill/train when seq >= block threshold).
+  * ``full_attention``   -- direct einsum path for short sequences.
+  * ``decode_attention`` -- single-position query against a KV cache.
+
+Sharding is expressed with with_sharding_constraint on q/k/v/logits using the
+active rule set (see repro.runtime.sharding); the math is sharding-agnostic.
+
+KV caches may be bf16 or int8 (per-head symmetric scales) -- the paper's
+recipe applied to attention state (beyond-paper; see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+import os
+
+# Perf-iteration toggle (EXPERIMENTS.md §Perf): triangular causal flash
+# schedule -- visits only the kv chunks at/below each q chunk's diagonal.
+TRIANGULAR = os.environ.get("REPRO_TRIANGULAR_FLASH", "0") == "1"
+
+
+def repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, KVH, D) -> (B, S, KVH*groups, D) by head repetition."""
+    if groups == 1:
+        return k
+    B, S, KVH, D = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, S, KVH, groups, D))
+    return k.reshape(B, S, KVH * groups, D)
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (keeps blocking exact for
+    non-power-of-two lengths like whisper's 1500 encoder frames)."""
+    if n <= target:
+        return n
+    for b in range(target, 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def _mask_block(q_pos, k_pos, causal: bool, window: int):
+    """(bq, bk) boolean mask: True = attend."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m = m & (k_pos[None, :] <= q_pos[:, None])
+    if window > 0:
+        m = m & (k_pos[None, :] > q_pos[:, None] - window)
+    return m
+
+
+def full_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, H, D)  (already GQA-repeated)
+    v: jax.Array,
+    q_offset: jax.Array | int = 0,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / np.sqrt(D)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    mask = _mask_block(q_pos, k_pos, causal, window)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, H, D)
+    v: jax.Array,
+    q_offset: int = 0,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    """Blockwise online-softmax attention with a recomputing custom VJP.
+
+    Forward memory: O(block_q * block_k) logits per chunk step; the backward
+    pass recomputes chunk logits from the saved (q, k, v, out, lse) instead of
+    differentiating the scan (which would materialize all S^2 chunk
+    intermediates -- the difference between fitting HBM and not, on trains).
+
+    The schedule visits the full rectangular chunk grid with masking; causal
+    runs at ~2x useful FLOPs (documented; a triangular schedule is a recorded
+    perf iteration in EXPERIMENTS.md).
+    """
+    out, _ = _flash_fwd_impl(q, k, v, q_offset, causal, window, block_q,
+                             block_k)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, q_offset, causal, window, block_q, block_k):
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    bq = _pick_block(Sq, block_q)
+    bk = _pick_block(Sk, block_k)
+    scale = 1.0 / np.sqrt(D)
+    nq, nk = Sq // bq, Sk // bk
+
+    qs = ((q.astype(jnp.float32) * scale).astype(q.dtype)
+          ).reshape(B, nq, bq, H, D)
+
+    def q_chunk_body(qi, q_blk):
+        q_pos = q_offset + qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, ki):
+            acc, m_run, l_run = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * bk, bk, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * bk, bk, axis=1)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                                preferred_element_type=jnp.float32)
+            k_pos = ki * bk + jnp.arange(bk)
+            mask = _mask_block(q_pos, k_pos, causal, window)
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, logits.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l_run * alpha + p.sum(-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, H, bq, D), jnp.float32)
+        m0 = jnp.full((B, H, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+        if causal and window == 0 and TRIANGULAR:
+            # triangular schedule: q-chunk qi only visits kv chunks up to its
+            # own diagonal -- halves attention FLOPs vs the full grid
+            # (perf iteration REPRO_TRIANGULAR_FLASH=1; see EXPERIMENTS §Perf).
+            limit = jnp.minimum(
+                (q_offset + (qi + 1) * bq + bk - 1) // bk, nk).astype(jnp.int32)
+            acc, m_run, l_run = jax.lax.fori_loop(
+                0, limit,
+                lambda ki, c: kv_step(c, ki)[0],
+                (acc0, m0, l0))
+        else:
+            (acc, m_run, l_run), _ = jax.lax.scan(
+                kv_step, (acc0, m0, l0), jnp.arange(nk))
+        l_safe = jnp.maximum(l_run, 1e-30)
+        out = jnp.einsum("bhqd->bqhd", acc / l_safe[..., None])
+        lse = m_run + jnp.log(l_safe)  # (B, H, bq)
+        return out, jnp.moveaxis(lse, 2, 1)  # (B, bq, H)
+
+    outs, lses = jax.lax.map(
+        lambda args: q_chunk_body(*args),
+        (jnp.arange(nq), jnp.moveaxis(qs, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D).astype(v.dtype)
+    lse = jnp.moveaxis(lses, 0, 1).reshape(B, Sq, H)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_offset, causal, window, block_q, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, q_offset, causal, window, block_q,
+                               block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(q_offset, causal, window, block_q, block_k, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    bq = _pick_block(Sq, block_q)
+    bk = _pick_block(Sk, block_k)
+    scale = 1.0 / np.sqrt(D)
+    nq, nk = Sq // bq, Sk // bk
+    dout = dout.astype(jnp.float32)
+    # delta_i = sum_d dout_i * out_i  (flash-attention-2 backward)
+    delta = jnp.einsum("bqhd,bqhd->bqh", dout, out.astype(jnp.float32))
+
+    def q_chunk_body(qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * bq, bq, axis=1)
+        do_blk = jax.lax.dynamic_slice_in_dim(dout, qi * bq, bq, axis=1)
+        lse_blk = jax.lax.dynamic_slice_in_dim(lse, qi * bq, bq, axis=1)
+        dl_blk = jax.lax.dynamic_slice_in_dim(delta, qi * bq, bq, axis=1)
+        q_pos = q_offset + qi * bq + jnp.arange(bq)
+        qf = q_blk.astype(jnp.float32) * scale
+
+        def kv_step(carry, ki):
+            dq_acc, dk_acc, dv_acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * bk, bk, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * bk, bk, axis=1)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qf,
+                                k_blk.astype(jnp.float32))
+            k_pos = ki * bk + jnp.arange(bk)
+            mask = _mask_block(q_pos, k_pos, causal, window)
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+            p = jnp.exp(logits - jnp.moveaxis(lse_blk, 2, 1)[..., None])
+            dp = jnp.einsum("bqhd,bkhd->bhqk", do_blk,
+                            v_blk.astype(jnp.float32))
+            ds = p * (dp - jnp.moveaxis(dl_blk, 2, 1)[..., None])
+            dq_acc = dq_acc + jnp.einsum(
+                "bhqk,bkhd->bqhd", ds, k_blk.astype(jnp.float32)) * scale
+            dk_blk = jnp.einsum("bhqk,bqhd->bkhd", ds, qf)
+            dv_blk = jnp.einsum("bhqk,bqhd->bkhd", p, do_blk)
+
+            def add_at(acc, blk):
+                cur = jax.lax.dynamic_slice_in_dim(acc, ki * bk, bk, axis=1)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    acc, cur + blk, ki * bk, axis=1)
+
+            return (dq_acc, add_at(dk_acc, dk_blk), add_at(dv_acc, dv_blk)), None
+
+        dq0 = jnp.zeros((B, bq, H, D), jnp.float32)
+        dk0 = jnp.zeros((B, Sk, H, D), jnp.float32)
+        dv0 = jnp.zeros((B, Sk, H, D), jnp.float32)
+        if causal and window == 0 and TRIANGULAR:
+            limit = jnp.minimum(
+                (q_offset + (qi + 1) * bq + bk - 1) // bk, nk).astype(jnp.int32)
+            dq_b, dk_b, dv_b = jax.lax.fori_loop(
+                0, limit, lambda ki, c: kv_step(c, ki)[0], (dq0, dk0, dv0))
+        else:
+            (dq_b, dk_b, dv_b), _ = jax.lax.scan(
+                kv_step, (dq0, dk0, dv0), jnp.arange(nk))
+        return dq_b, dk_b, dv_b
+
+    def outer(carry, qi):
+        dk_tot, dv_tot = carry
+        dq_b, dk_b, dv_b = q_chunk_body(qi)
+        return (dk_tot + dk_b, dv_tot + dv_b), dq_b
+
+    (dk_tot, dv_tot), dq_chunks = jax.lax.scan(
+        outer,
+        (jnp.zeros((B, Sk, H, D), jnp.float32),
+         jnp.zeros((B, Sk, H, D), jnp.float32)),
+        jnp.arange(nq))
+    dq = jnp.moveaxis(dq_chunks, 0, 1).reshape(B, Sq, H, D)
+    return dq.astype(q.dtype), dk_tot.astype(k.dtype), dv_tot.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, KVH, D), bf16 or int8
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # (B,) or scalar int32: valid prefix length
+    window: int = 0,
+    k_scale: Optional[jax.Array] = None,  # (B, S, KVH) for int8 caches
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """One-token attention against a (possibly int8-quantized) KV cache.
+
+    For int8 caches the per-(pos, head) scales fold into the logits and into
+    the probability weights, so no dequantized copy of the cache is ever
+    materialized (the HBM read stays int8 -- the paper's memory win).
+    """
+    B, S, KVH, D = k_cache.shape
+    H = q.shape[2]
+    groups = H // KVH
+    scale = 1.0 / np.sqrt(D)
+    qg = ((q.astype(jnp.float32) * scale).astype(q.dtype)
+          ).reshape(B, 1, KVH, groups, D)
+    kc = k_cache.astype(q.dtype) if k_cache.dtype == jnp.int8 else k_cache
+    # (B, 1, KVH, G, D) x (B, S, KVH, D) -> (B, KVH, G, S)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc,
+                        preferred_element_type=jnp.float32)
+    logits = logits[:, :, :, 0]  # (B, KVH, G, S)
+    if k_scale is not None:
+        logits = logits * jnp.transpose(
+            k_scale.astype(jnp.float32), (0, 2, 1))[:, :, None, :]
+    pos = jnp.arange(S)
+    valid = pos[None] < jnp.reshape(cache_len, (-1, 1))  # (B, S)
+    if window > 0:
+        valid = valid & (pos[None] >= jnp.reshape(cache_len, (-1, 1)) - window)
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if v_scale is not None:
+        probs = probs * jnp.transpose(
+            v_scale.astype(jnp.float32), (0, 2, 1))[:, :, None, :]
+    vc = v_cache.astype(q.dtype) if v_cache.dtype == jnp.int8 else v_cache
+    out = jnp.einsum("bkgs,bskd->bkgd", probs.astype(q.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# --- KV cache (bf16 or int8) ------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    max_len: int
+    kv_heads: int
+    head_dim: int
+    quantized: bool = False  # int8 per (head) symmetric, scales carried
+
+
+def init_cache(batch: int, n_layers: int, spec: CacheSpec, dtype=jnp.bfloat16):
+    shape = (n_layers, batch, spec.max_len, spec.kv_heads, spec.head_dim)
+    if spec.quantized:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.ones(shape[:2] + (spec.max_len, spec.kv_heads), jnp.float32),
+            "v_scale": jnp.ones(shape[:2] + (spec.max_len, spec.kv_heads), jnp.float32),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def quantize_kv(k: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per (batch, pos, head) symmetric int8 (paper recipe on attention state)."""
+    s = jnp.maximum(jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def dequantize_kv(q: jax.Array, s: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)

@@ -1,0 +1,98 @@
+"""Shared layer primitives with logical-axis sharding annotations.
+
+Every parameter initializer returns both the array and a *logical spec*: a
+tuple of logical axis names (resolved to mesh axes by
+``repro.runtime.sharding``).  Models build parallel (params, specs) trees so
+pjit in_shardings derive mechanically from per-arch rules.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+def dense_init(key, shape: Sequence[int], spec: Tuple[Optional[str], ...],
+               dtype=jnp.bfloat16, scale: Optional[float] = None):
+    """Variance-scaling dense init annotated with logical axes."""
+    fan_in = shape[0] if len(shape) > 1 else 1
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    w = (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+    assert len(spec) == len(shape), (spec, shape)
+    return w, spec
+
+
+def zeros_init(shape, spec, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype), spec
+
+
+def ones_init(shape, spec, dtype=jnp.bfloat16):
+    return jnp.ones(shape, dtype), spec
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: Optional[jax.Array],
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def norm_apply(kind: str, x, params, name: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params[name])
+    return layernorm(x, params[name], params.get(name + "_b"))
+
+
+def norm_init(kind: str, d: int, name: str, params: Params, specs: Specs,
+              dtype=jnp.bfloat16):
+    params[name], specs[name] = ones_init((d,), ("embed",), dtype)
+    if kind == "layernorm":
+        params[name + "_b"], specs[name + "_b"] = zeros_init((d,), ("embed",), dtype)
+
+
+ACTIVATIONS: Dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: Optional[jax.Array],
+                  cache: Optional[jax.Array] = None):
+    """Depthwise causal conv over time.  x: (B, T, D); w: (K, D).
+
+    With ``cache`` (B, K-1, D) performs streaming (decode) convolution and
+    returns (y, new_cache); otherwise pads with zeros (train/prefill) and
+    returns (y, last K-1 inputs as cache).
+    """
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, T+K-1, D)
+    y = jnp.zeros_like(x)
+    for k in range(K):
+        y = y + xp[:, k : k + x.shape[1]] * w[k]
+    if b is not None:
+        y = y + b
+    new_cache = xp[:, -(K - 1):] if K > 1 else jnp.zeros_like(xp[:, :0])
+    return y, new_cache

@@ -1,0 +1,40 @@
+"""Token embedding + logits head with vocab (tensor) parallelism."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .qmm import emb_logits, emb_lookup, mm
+
+
+def embed_init(key, vocab: int, d_model: int, params: Dict, specs: Dict,
+               tie: bool, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    emb = (jax.random.normal(k1, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+    params["embedding"], specs["embedding"] = emb, ("vocab", "embed")
+    if not tie:
+        head = (jax.random.normal(k2, (d_model, vocab), jnp.float32) * 0.02).astype(dtype)
+        params["lm_head"], specs["lm_head"] = head, ("embed", "vocab")
+
+
+def embed_tokens(params: Dict, tokens: jax.Array) -> jax.Array:
+    return emb_lookup(params["embedding"], tokens)
+
+
+def logits_head(params: Dict, x: jax.Array) -> jax.Array:
+    if "lm_head" in params:
+        return mm(x, params["lm_head"])
+    return emb_logits(params["embedding"], x)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """Mean token CE; logits may be vocab-sharded (GSPMD handles logsumexp)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    mask = (labels != ignore_id).astype(jnp.float32)
+    loss = (lse - ll) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,37 @@
+"""MLP variants: SwiGLU / GeGLU / GELU, with TP-friendly logical specs."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, ACTIVATIONS
+from .qmm import mm
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, params: Dict, specs: Dict,
+             prefix: str = "mlp", dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        params[f"{prefix}_gate"], specs[f"{prefix}_gate"] = dense_init(
+            k1, (d_model, d_ff), ("embed", "mlp"), dtype)
+        params[f"{prefix}_up"], specs[f"{prefix}_up"] = dense_init(
+            k2, (d_model, d_ff), ("embed", "mlp"), dtype)
+    else:
+        params[f"{prefix}_up"], specs[f"{prefix}_up"] = dense_init(
+            k2, (d_model, d_ff), ("embed", "mlp"), dtype)
+    params[f"{prefix}_down"], specs[f"{prefix}_down"] = dense_init(
+        k3, (d_ff, d_model), ("mlp", "embed"), dtype)
+
+
+def mlp_apply(params: Dict, x: jax.Array, kind: str, prefix: str = "mlp",
+              constrain=None) -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        h = act(mm(x, params[f"{prefix}_gate"])) * mm(x, params[f"{prefix}_up"])
+    else:
+        h = jax.nn.gelu(mm(x, params[f"{prefix}_up"]))
+    if constrain is not None:
+        h = constrain(h, ("batch", "seq", "mlp"))
+    return mm(h, params[f"{prefix}_down"])

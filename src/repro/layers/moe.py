@@ -1,0 +1,119 @@
+"""Mixture-of-Experts with expert parallelism via shard_map + capacity dispatch.
+
+Scheme (see DESIGN.md "EP mapping"):
+  * the mesh's "model" axis is factored into ep (expert-parallel) x ff_tp
+    (tensor-parallel within each expert): ep = min(n_experts, model_size).
+  * inside shard_map each model-rank owns n_experts/ep experts; tokens are
+    routed locally with a static per-expert capacity (Switch-style; dropped
+    tokens fall through on the residual), experts run as dense batched
+    matmuls, and a psum over "model" recombines the top-k expert outputs.
+  * grok-1 (8 experts on a 16-wide model axis) uses ep=8, ff_tp=2; kimi-k2
+    (384 experts) uses ep=16, ff_tp=1 with 24 resident experts per rank.
+
+FLOPs are ~capacity_factor x the useful expert FLOPs -- no one-hot dispatch
+einsums, so cost_analysis stays honest for the roofline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+from .qmm import expert_einsum, is_quant
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, params: Dict,
+             specs: Dict, prefix: str = "moe", dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params[f"{prefix}_router"], specs[f"{prefix}_router"] = dense_init(
+        k1, (d_model, n_experts), ("embed", None), jnp.float32)
+    params[f"{prefix}_gate"], specs[f"{prefix}_gate"] = dense_init(
+        k2, (n_experts, d_model, d_ff), ("experts", "embed", "expert_mlp"), dtype)
+    params[f"{prefix}_up"], specs[f"{prefix}_up"] = dense_init(
+        k3, (n_experts, d_model, d_ff), ("experts", "embed", "expert_mlp"), dtype)
+    params[f"{prefix}_down"], specs[f"{prefix}_down"] = dense_init(
+        k4, (n_experts, d_ff, d_model), ("experts", "expert_mlp", "embed"), dtype)
+
+
+def _local_expert_ffn(x: jax.Array, gate_w, up_w, down_w) -> jax.Array:
+    """x: (E_loc, C, d) batched over local experts; SwiGLU."""
+    h = jax.nn.silu(expert_einsum("ecd,edf->ecf", x, gate_w)) * expert_einsum(
+        "ecd,edf->ecf", x, up_w
+    )
+    return expert_einsum("ecf,efd->ecd", h, down_w)
+
+
+def moe_apply_local(
+    params: Dict,
+    x: jax.Array,  # (T, d) local tokens (already flattened)
+    *,
+    n_experts: int,
+    topk: int,
+    capacity_factor: float,
+    ep_rank: jax.Array,  # scalar int32: this rank's position on the ep axis
+    ep_size: int,
+    model_axis: Optional[str],
+    prefix: str = "moe",
+) -> jax.Array:
+    """Body run inside shard_map.  Expert weights arrive pre-sliced to
+    (E_loc, d, ff_loc).  Returns the combined (T, d) expert output."""
+    T, d = x.shape
+    e_loc = n_experts // ep_size
+    capacity = max(int(T * topk * capacity_factor / n_experts) * e_loc, e_loc)
+    capacity = min(capacity, T * topk)
+
+    logits = (x.astype(jnp.float32) @ params[f"{prefix}_router"].astype(jnp.float32)).astype(
+        jnp.float32
+    )  # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(logits, topk)  # (T, k)
+    gate_p = jax.nn.softmax(gate_vals, axis=-1)  # normalize over selected
+
+    # flatten (token, k) assignments
+    flat_expert = gate_idx.reshape(-1)  # (T*k,)
+    flat_prob = gate_p.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T), topk)
+
+    # keep only experts owned by this rank: [ep_rank*e_loc, (ep_rank+1)*e_loc)
+    local_e = flat_expert - ep_rank * e_loc
+    mine = (local_e >= 0) & (local_e < e_loc)
+
+    # rank assignments by (expert, arrival) to give each a capacity slot
+    sort_key = jnp.where(mine, local_e, e_loc)  # non-mine sort to the end
+    order = jnp.argsort(sort_key, stable=True)
+    sorted_e = sort_key[order]
+    # position within expert group = index - start of group
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(e_loc + 1))
+    pos_in_group = jnp.arange(sorted_e.shape[0]) - group_start[
+        jnp.clip(sorted_e, 0, e_loc)
+    ]
+    cap_per_e = capacity // e_loc
+    keep = (sorted_e < e_loc) & (pos_in_group < cap_per_e)
+    slot = jnp.where(
+        keep, jnp.clip(sorted_e, 0, e_loc - 1) * cap_per_e + pos_in_group, capacity
+    )
+
+    # scatter tokens into (capacity+1, d) buffer (last row = drop bin)
+    buf = jnp.zeros((capacity + 1, d), x.dtype)
+    tok_idx = flat_token[order]
+    buf = buf.at[slot].set(x[tok_idx], mode="drop")
+    expert_in = buf[:capacity].reshape(e_loc, cap_per_e, d)
+
+    out = _local_expert_ffn(
+        expert_in, params[f"{prefix}_gate"], params[f"{prefix}_up"],
+        params[f"{prefix}_down"],
+    )  # (E_loc, cap, d)
+
+    # gather back: each kept assignment reads its slot, weighted by gate prob
+    out_flat = jnp.concatenate(
+        [out.reshape(capacity, d), jnp.zeros((1, d), out.dtype)], axis=0
+    )
+    contrib = out_flat[slot] * flat_prob[order][:, None].astype(out.dtype)
+    y = jnp.zeros((T, d), out.dtype).at[tok_idx].add(
+        jnp.where(keep[:, None], contrib, 0)
+    )
+    if model_axis is not None:
+        y = jax.lax.psum(y, model_axis)
+    return y

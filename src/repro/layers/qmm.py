@@ -1,0 +1,64 @@
+"""Quantization-aware matmul helpers.
+
+A weight is either a plain array or a quantized dict {"q": int8, "s": f32}
+with per-output-channel scales (the paper's symmetric max/127 recipe applied
+per channel -- the standard strengthening for transformer weights).  ``mm``
+and friends dequantize *inside* the consumer so XLA reads int8 from HBM --
+on decode (memory-bound) that is a direct 2x/4x memory-term win.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Union
+
+import jax
+import jax.numpy as jnp
+
+QWeight = Union[jax.Array, Dict[str, jax.Array]]
+
+
+def is_quant(w: QWeight) -> bool:
+    return isinstance(w, dict) and "q" in w
+
+
+def mm(x: jax.Array, w: QWeight) -> jax.Array:
+    """x @ w with transparent int8-weight dequantization."""
+    if is_quant(w):
+        y = x @ w["q"].astype(x.dtype)
+        return y * w["s"].astype(x.dtype)
+    return x @ w
+
+
+def emb_lookup(w: QWeight, ids: jax.Array) -> jax.Array:
+    if is_quant(w):
+        rows = jnp.take(w["q"], ids, axis=0)
+        scale = jnp.take(w["s"], ids, axis=0)
+        return rows.astype(jnp.bfloat16) * scale[..., None].astype(jnp.bfloat16)
+    return jnp.take(w, ids, axis=0)
+
+
+def emb_logits(w: QWeight, x: jax.Array) -> jax.Array:
+    """x @ embedding.T (tied head); per-row scales become per-logit scales."""
+    if is_quant(w):
+        y = x @ w["q"].T.astype(x.dtype)
+        return y * w["s"].astype(x.dtype)
+    return x @ w.T
+
+
+def expert_einsum(eq: str, x: jax.Array, w: QWeight) -> jax.Array:
+    """Batched expert matmuls; per (expert, out-channel) scales."""
+    if is_quant(w):
+        y = jnp.einsum(eq, x, w["q"].astype(x.dtype))
+        # scales: (E, out) broadcast over the capacity dim
+        return y * w["s"][:, None, :].astype(x.dtype)
+    return jnp.einsum(eq, x, w)
+
+
+def quantize_weight(w: jax.Array, channel_axis: int = -1) -> Dict[str, jax.Array]:
+    """Symmetric per-channel int8 (paper: s = max|W|/127)."""
+    wf = w.astype(jnp.float32)
+    axes = tuple(i for i in range(w.ndim) if i != channel_axis % w.ndim)
+    s = jnp.maximum(jnp.max(jnp.abs(wf), axis=axes), 1e-8) / 127.0
+    shape = [1] * w.ndim
+    shape[channel_axis % w.ndim] = w.shape[channel_axis]
+    q = jnp.clip(jnp.round(wf / s.reshape(shape)), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": s.astype(jnp.float32)}

@@ -1,0 +1,82 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin temporal mixing).
+
+recurrence:  r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+             a_t = exp(c * softplus(Lambda) * r_t * log a)   [gated decay]
+             h_t = a_t (.) h_{t-1} + sqrt(1 - a_t^2) (.) (i_t (.) x_t)
+
+plus the Griffin block structure: conv1d(4) -> RG-LRU inside a gated linear
+unit.  Decode carries {"h", "conv"} state; the 1:2 attention:recurrent
+pattern is assembled in repro.models.recurrentgemma.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import dense_init, causal_conv1d
+from .qmm import mm
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def rglru_init(key, d_model: int, d_rnn: int, d_conv: int, params: Dict,
+               specs: Dict, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    params["rg_in"], specs["rg_in"] = dense_init(
+        ks[0], (d_model, 2 * d_rnn), ("embed", "mlp"), dtype)
+    params["conv_w"], specs["conv_w"] = dense_init(
+        ks[1], (d_conv, d_rnn), (None, "mlp"), dtype, scale=0.5)
+    params["conv_b"], specs["conv_b"] = jnp.zeros((d_rnn,), dtype), ("mlp",)
+    params["rg_gate_r"], specs["rg_gate_r"] = dense_init(
+        ks[2], (d_rnn, d_rnn), ("mlp", "mlp2"), dtype)
+    params["rg_gate_i"], specs["rg_gate_i"] = dense_init(
+        ks[3], (d_rnn, d_rnn), ("mlp", "mlp2"), dtype)
+    # Lambda init so that a = sigmoid(Lambda) in [0.9, 0.999]
+    lam = np.random.default_rng(0).uniform(0.9, 0.999, d_rnn)
+    params["rg_lambda"], specs["rg_lambda"] = (
+        jnp.asarray(np.log(lam / (1 - lam)), jnp.float32), ("mlp",))
+    params["rg_out"], specs["rg_out"] = dense_init(
+        ks[4], (d_rnn, d_model), ("mlp", "embed"), dtype)
+
+
+def _rglru_scan(x: jax.Array, r: jax.Array, i: jax.Array, log_a: jax.Array,
+                h0: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """x, r, i: (B, T, D); log_a: (D,) negative; returns (y, h_T)."""
+    B, T, D = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+    log_a_t = (-_C) * jax.nn.softplus(log_a)[None, None] * r.astype(jnp.float32)
+    a_t = jnp.exp(log_a_t)  # (B, T, D) in (0, 1)
+    gated_x = (i * x).astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a_t), 1e-12))
+
+    def step(h, inputs):
+        a, bx = inputs
+        h = a * h + bx
+        return h, h
+
+    xs = (jnp.moveaxis(a_t, 1, 0), jnp.moveaxis(beta * gated_x, 1, 0))
+    h_T, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_T
+
+
+def rglru_apply(
+    params: Dict,
+    x: jax.Array,  # (B, T, d_model)
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    xz = mm(x, params["rg_in"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_cache = state["conv"] if state is not None else None
+    xs, new_conv = causal_conv1d(xs, params["conv_w"], params["conv_b"], conv_cache)
+    r = jax.nn.sigmoid(mm(xs, params["rg_gate_r"]))
+    i = jax.nn.sigmoid(mm(xs, params["rg_gate_i"]))
+    h0 = state["h"] if state is not None else None
+    y, h_T = _rglru_scan(xs, r, i, params["rg_lambda"], h0)
+    y = y.astype(x.dtype) * jax.nn.gelu(z)
+    out = mm(y, params["rg_out"])
+    new_state = {"h": h_T, "conv": new_conv} if state is not None else None
+    return out, new_state

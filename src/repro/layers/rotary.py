@@ -1,0 +1,61 @@
+"""Rotary position embeddings (float path + integer Q0.15 tables)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions: (...,) int32 -> (sin, cos) of shape (..., head_dim/2) f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    D = x.shape[-1]
+    sin, cos = rope_angles(positions, D, theta)  # (B, S, D/2)
+    if sin.ndim == 2:  # (S, D/2) -> broadcast over batch
+        sin, cos = sin[None], cos[None]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def rope_tables_q15(max_seq: int, head_dim: int, theta: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Integer rotation tables: sin/cos in int16 Q0.15 (quantized serving).
+
+    Rotation is norm-preserving, so rotating int16-widened q/k by Q0.15
+    tables keeps the activation scale unchanged (beyond-paper extension of
+    the recipe to attention position encoding).
+    """
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, half, dtype=np.float64) / half))
+    ang = np.arange(max_seq, dtype=np.float64)[:, None] * inv
+    to_q15 = lambda v: np.clip(np.round(v * 32768.0), -32768, 32767).astype(np.int16)
+    return to_q15(np.sin(ang)), to_q15(np.cos(ang))
+
+
+def apply_rope_int(q_int: jax.Array, sin_q15: jax.Array, cos_q15: jax.Array) -> jax.Array:
+    """Integer RoPE: x int16/int32 (B, S, H, D), tables (S, D/2) Q0.15.
+
+    Output int32 in the same scale as the input (rounded); pair-wise rotation
+    with Q0.15 fixed-point multiplies.
+    """
+    from repro.core import fixedpoint as fp
+
+    x = q_int.astype(jnp.int32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    sin = sin_q15.astype(jnp.int32)[None, :, None, :]
+    cos = cos_q15.astype(jnp.int32)[None, :, None, :]
+    y1 = fp.rounding_divide_by_pot(x1 * cos - x2 * sin, 15)
+    y2 = fp.rounding_divide_by_pot(x2 * cos + x1 * sin, 15)
+    return jnp.concatenate([y1, y2], axis=-1)

@@ -1,0 +1,95 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b backbone).
+
+Train/prefill runs a chunked sequential scan over time (carry = (B, d_inner,
+state)); decode is a single recurrence step.  The 16-wide state dimension is
+the natural target for the paper's 16-bit-state quantization (DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import dense_init, causal_conv1d
+from .qmm import mm
+
+
+def ssm_init(key, d_model: int, d_inner: int, d_state: int, d_conv: int,
+             dt_rank: int, params: Dict, specs: Dict, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 8)
+    params["in_proj"], specs["in_proj"] = dense_init(
+        ks[0], (d_model, 2 * d_inner), ("embed", "mlp"), dtype)
+    params["conv_w"], specs["conv_w"] = dense_init(
+        ks[1], (d_conv, d_inner), (None, "mlp"), dtype, scale=0.5)
+    params["conv_b"], specs["conv_b"] = (
+        jnp.zeros((d_inner,), dtype), ("mlp",))
+    params["x_proj"], specs["x_proj"] = dense_init(
+        ks[2], (d_inner, dt_rank + 2 * d_state), ("mlp", None), dtype)
+    params["dt_proj"], specs["dt_proj"] = dense_init(
+        ks[3], (dt_rank, d_inner), (None, "mlp"), dtype)
+    params["dt_bias"], specs["dt_bias"] = (
+        jnp.asarray(np.log(np.expm1(np.linspace(1e-3, 0.1, d_inner))), dtype),
+        ("mlp",))
+    # S4D-real initialization of A (negative)
+    a = np.tile(np.arange(1, d_state + 1, dtype=np.float32), (d_inner, 1))
+    params["A_log"], specs["A_log"] = jnp.asarray(np.log(a), jnp.float32), ("mlp", None)
+    params["D"], specs["D"] = jnp.ones((d_inner,), jnp.float32), ("mlp",)
+    params["out_proj"], specs["out_proj"] = dense_init(
+        ks[4], (d_inner, d_model), ("mlp", "embed"), dtype)
+
+
+def _ssm_scan(u: jax.Array, delta: jax.Array, A: jax.Array, B: jax.Array,
+              C: jax.Array, h0: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Sequential selective scan.
+    u, delta: (Bt, T, Di); A: (Di, N); B, C: (Bt, T, N); h0: (Bt, Di, N).
+    Returns (y (Bt, T, Di), h_T)."""
+    Bt, T, Di = u.shape
+    N = A.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bt, Di, N), jnp.float32)
+
+    dA = jnp.exp(delta.astype(jnp.float32)[..., None] * A[None, None])  # (Bt,T,Di,N)
+    dBu = (delta * u).astype(jnp.float32)[..., None] * B[:, :, None, :]
+
+    def step(h, inputs):
+        dA_t, dBu_t, C_t = inputs
+        h = h * dA_t + dBu_t  # (Bt, Di, N)
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(dA, 1, 0),
+        jnp.moveaxis(dBu, 1, 0),
+        jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+    )
+    h_T, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_T
+
+
+def ssm_apply(
+    params: Dict,
+    x: jax.Array,  # (B, T, d_model)
+    state: Optional[Dict[str, jax.Array]] = None,  # decode: {"h", "conv"}
+    d_state: int = 16,
+    dt_rank: int = 0,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    dtp = params["dt_proj"]
+    d_inner = (dtp["q"] if isinstance(dtp, dict) else dtp).shape[1]
+    xz = mm(x, params["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_cache = state["conv"] if state is not None else None
+    xs, new_conv = causal_conv1d(xs, params["conv_w"], params["conv_b"], conv_cache)
+    xs = jax.nn.silu(xs)
+    proj = mm(xs, params["x_proj"])
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(mm(dt, params["dt_proj"]) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])  # (Di, N)
+    h0 = state["h"] if state is not None else None
+    y, h_T = _ssm_scan(xs, delta, A, Bc, Cc, h0)
+    y = y.astype(x.dtype) + xs * params["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = mm(y, params["out_proj"])
+    new_state = {"h": h_T, "conv": new_conv} if state is not None else None
+    return out, new_state

@@ -1,0 +1,228 @@
+"""Float LSTM reference: all topology variants covered by the paper (sec 2).
+
+Variants (composable flags, eqs 1-7):
+  * peephole connections  P (.) c      [Gers et al.]
+  * CIFG: coupled input/forget gate    i = 1 - f     [Greff et al.]
+  * projection layer      h = W_proj m + b_proj      [Sak et al.]
+  * layer normalization   norm(.) (.) L + b          [Ba et al.]
+
+This float graph is (a) the accuracy baseline, (b) the calibration vehicle
+(via ``TapCollector`` taps at every Table-2 tensor), and (c) the QAT graph
+(W and R deliberately kept un-concatenated per fig 16 so each matmul carries
+its own fake-quant scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fake_quant as fq
+
+GATES = ("i", "f", "z", "o")  # input, forget, update (cell), output
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMVariant:
+    use_layernorm: bool = False
+    use_projection: bool = False
+    use_peephole: bool = False
+    use_cifg: bool = False
+
+    @property
+    def gates(self) -> Tuple[str, ...]:
+        return tuple(g for g in GATES if not (self.use_cifg and g == "i"))
+
+    @property
+    def name(self) -> str:
+        parts = []
+        parts.append("LN" if self.use_layernorm else "noLN")
+        parts.append("Proj" if self.use_projection else "noProj")
+        parts.append("PH" if self.use_peephole else "noPH")
+        if self.use_cifg:
+            parts.append("CIFG")
+        return "-".join(parts)
+
+
+ALL_VARIANTS = tuple(
+    LSTMVariant(ln, proj, ph, cifg)
+    for ln in (False, True)
+    for proj in (False, True)
+    for ph in (False, True)
+    for cifg in (False, True)
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMConfig:
+    d_input: int
+    d_hidden: int
+    d_proj: int = 0  # 0 => no projection
+    variant: LSTMVariant = LSTMVariant()
+
+    @property
+    def d_output(self) -> int:
+        return self.d_proj if self.variant.use_projection else self.d_hidden
+
+
+def init_lstm_params(key, cfg: LSTMConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    """One LSTM layer's parameters; per-gate W/R kept separate (fig 16)."""
+    v = cfg.variant
+    keys = jax.random.split(key, 16)
+    k = iter(keys)
+
+    def dense(key, shape, fan_in):
+        return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+    params: Dict[str, Any] = {"W": {}, "R": {}, "b": {}}
+    for g in v.gates:
+        params["W"][g] = dense(next(k), (cfg.d_input, cfg.d_hidden), cfg.d_input)
+        params["R"][g] = dense(next(k), (cfg.d_output, cfg.d_hidden), cfg.d_output)
+        params["b"][g] = jnp.zeros((cfg.d_hidden,), dtype)
+    if v.use_peephole:
+        params["P"] = {
+            g: 0.1 * jax.random.normal(next(k), (cfg.d_hidden,)).astype(dtype)
+            for g in v.gates
+            if g != "z"
+        }
+    if v.use_layernorm:
+        params["L"] = {g: jnp.ones((cfg.d_hidden,), dtype) for g in v.gates}
+    if v.use_projection:
+        params["W_proj"] = dense(next(k), (cfg.d_hidden, cfg.d_proj), cfg.d_hidden)
+        params["b_proj"] = jnp.zeros((cfg.d_proj,), dtype)
+    return params
+
+
+def _layernorm_stats(x: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-12)
+
+
+def lstm_cell(
+    params: Dict[str, Any],
+    cfg: LSTMConfig,
+    x: jax.Array,
+    h: jax.Array,
+    c: jax.Array,
+    collector=None,
+    qat: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """One float LSTM step (eqs 1-7).  x: (B, d_in); h: (B, d_out); c: (B, d_h).
+
+    ``collector``: optional TapCollector registering every Table-2 range.
+    ``qat``: apply straight-through fake quant at the Table-2 tap points.
+    """
+    v = cfg.variant
+
+    def tap(name, t):
+        return collector.tap(name, t) if collector is not None else t
+
+    def maybe_fq(t, **kw):
+        return fq.fake_quant_asymmetric(t, **kw) if qat else t
+
+    x = tap("x", x)
+    h = tap("h", h)
+    if qat:
+        x = fq.fake_quant_asymmetric(x, bits=8)
+        h = fq.fake_quant_asymmetric(h, bits=8)
+
+    def gate_preact(g: str, c_for_peephole: Optional[jax.Array]):
+        W = params["W"][g]
+        R = params["R"][g]
+        if qat:
+            W = fq.fake_quant_symmetric(W, bits=8)
+            R = fq.fake_quant_symmetric(R, bits=8)
+        acc = x @ W + h @ R
+        if v.use_peephole and g != "z" and c_for_peephole is not None:
+            P = params["P"][g]
+            if qat:
+                P = fq.fake_quant_symmetric(P, bits=16)
+            acc = acc + P * c_for_peephole
+        acc = tap(f"g_{g}", acc)  # Table-2 row g_lambda (LN output scale)
+        if v.use_layernorm:
+            acc = _layernorm_stats(acc) * params["L"][g] + params["b"][g]
+        else:
+            acc = acc + params["b"][g]
+        if qat:
+            acc = fq.fake_quant_q(acc, fractional_bits=12)  # Q3.12 activation in
+        return acc
+
+    f_t = jax.nn.sigmoid(gate_preact("f", c))
+    z_t = jnp.tanh(gate_preact("z", None))
+    if v.use_cifg:
+        i_t = 1.0 - f_t
+    else:
+        i_t = jax.nn.sigmoid(gate_preact("i", c))
+    c_new = i_t * z_t + f_t * c
+    c_new = tap("c", c_new)
+    if qat:
+        c_new = fq.fake_quant_symmetric(c_new, bits=16, pot=True)
+    o_t = jax.nn.sigmoid(gate_preact("o", c_new))
+    m_t = o_t * jnp.tanh(c_new)
+    m_t = tap("m", m_t)
+    if v.use_projection:
+        if qat:
+            m_t = fq.fake_quant_asymmetric(m_t, bits=8)
+        Wp = params["W_proj"]
+        if qat:
+            Wp = fq.fake_quant_symmetric(Wp, bits=8)
+        h_new = m_t @ Wp + params["b_proj"]
+    else:
+        h_new = m_t
+    h_new = tap("h_out", h_new)
+    return h_new, c_new
+
+
+def lstm_layer(
+    params: Dict[str, Any],
+    cfg: LSTMConfig,
+    xs: jax.Array,
+    h0: Optional[jax.Array] = None,
+    c0: Optional[jax.Array] = None,
+    collector=None,
+    qat: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Run a layer over time.  xs: (B, T, d_in) -> (B, T, d_out)."""
+    B = xs.shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((B, cfg.d_output), xs.dtype)
+    if c0 is None:
+        c0 = jnp.zeros((B, cfg.d_hidden), xs.dtype)
+
+    if collector is not None:
+        # Calibration path: unrolled python loop so taps aggregate across
+        # steps without threading carry types through lax.scan.
+        h, c = h0, c0
+        outs = []
+        for t in range(xs.shape[1]):
+            h, c = lstm_cell(params, cfg, xs[:, t], h, c, collector, qat)
+            outs.append(h)
+        return jnp.stack(outs, axis=1), (h, c)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell(params, cfg, x_t, h, c, None, qat)
+        return (h, c), h
+
+    (h, c), ys = jax.lax.scan(step, (h0, c0), jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), (h, c)
+
+
+def sparsify_params(params: Dict[str, Any], sparsity: float) -> Dict[str, Any]:
+    """Magnitude pruning of the matmul weights (paper Table 1: 50% sparse)."""
+
+    def prune(w):
+        if w.ndim != 2:
+            return w
+        k = int(round(w.size * sparsity))
+        if k == 0:
+            return w
+        thresh = jnp.sort(jnp.abs(w).ravel())[k - 1]
+        return jnp.where(jnp.abs(w) <= thresh, 0.0, w)
+
+    out = jax.tree_util.tree_map(prune, params)
+    return out

@@ -1,0 +1,114 @@
+"""Stacked-LSTM language model: the paper's own architecture as a config.
+
+10 layers x 2048 hidden with a 640-wide projection (the RNN-T encoder stack
+of [Sak et al.] / the paper's Table 1 models), embedding + softmax head.
+Supports float training/serving and -- via the repro.core recipe -- fully
+integer-only serving (see examples/serve_quantized.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.layers import embedding as emb
+from repro.models import lstm as L
+
+def d_proj(cfg):
+    """Projection width: 2048 -> 640 (Sak et al. ratio 5/16)."""
+    return max(cfg.d_rnn * 5 // 16, 8)
+
+
+def layer_cfgs(cfg: ArchConfig):
+    variant = L.LSTMVariant(use_layernorm=True, use_projection=True)
+    out = []
+    for i in range(cfg.n_layers):
+        d_in = cfg.d_model if i == 0 else d_proj(cfg)
+        out.append(L.LSTMConfig(d_in, cfg.d_rnn, d_proj(cfg), variant))
+    return out
+
+
+def init_params(key, cfg: ArchConfig) -> Tuple[Dict, Dict]:
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    emb.embed_init(ks[0], cfg.vocab_size, cfg.d_model, params, specs, tie=True)
+    # head consumes the projection width, not d_model
+    head = (jax.random.normal(ks[-1], (d_proj(cfg), cfg.vocab_size),
+                              jnp.float32) * 0.02).astype(jnp.bfloat16)
+    params["lm_head"], specs["lm_head"] = head, ("embed", "vocab")
+    params["lstm"] = [
+        jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32),
+            L.init_lstm_params(ks[i + 1], lc))
+        for i, lc in enumerate(layer_cfgs(cfg))
+    ]
+    # matrices shard ("embed", "mlp"); vectors shard ("mlp",)
+    specs["lstm"] = [
+        jax.tree_util.tree_map(
+            lambda x: ("embed", "mlp") if x.ndim == 2 else ("mlp",), p)
+        for p in params["lstm"]
+    ]
+    return params, specs
+
+
+def forward(params, cfg: ArchConfig, tokens, constrain, mesh=None,
+            train: bool = False, states=None, collector=None, qat=False):
+    x = emb.embed_tokens(params, tokens).astype(jnp.float32)
+    x = constrain(x, ("batch", "seq", "embed"))
+    new_states = []
+    for i, (p, lc) in enumerate(zip(params["lstm"], layer_cfgs(cfg))):
+        col = _prefixed(collector, f"l{i}/") if collector is not None else None
+        if states is None:
+            x, _ = L.lstm_layer(p, lc, x, collector=col, qat=qat)
+        else:
+            h0, c0 = states["h"][i], states["c"][i]
+            x, (h, c) = L.lstm_layer(p, lc, x, h0, c0, collector=col, qat=qat)
+            new_states.append((h, c))
+    logits = emb.logits_head(params, x.astype(jnp.bfloat16))
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    if states is None:
+        return logits, None
+    return logits, {
+        "h": [s[0] for s in new_states],
+        "c": [s[1] for s in new_states],
+        "len": states["len"] + tokens.shape[1],
+    }
+
+
+class _prefixed:
+    def __init__(self, collector, prefix):
+        self.collector = collector
+        self.prefix = prefix
+
+    def tap(self, name, x):
+        return self.collector.tap(self.prefix + name, x)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, constrain, mesh=None, qat=False):
+    logits, _ = forward(params, cfg, batch["tokens"], constrain, mesh,
+                        train=True, qat=qat)
+    return emb.cross_entropy(logits, batch["labels"])
+
+
+def init_decode_state(cfg: ArchConfig, batch: int):
+    return {
+        "h": [jnp.zeros((batch, d_proj(cfg)), jnp.float32)
+              for _ in range(cfg.n_layers)],
+        "c": [jnp.zeros((batch, cfg.d_rnn), jnp.float32)
+              for _ in range(cfg.n_layers)],
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg, tokens, constrain, mesh=None):
+    logits, _ = forward(params, cfg, tokens, constrain, mesh)
+    return logits[:, -1]
+
+
+def decode_step(params, cfg, token, states, constrain, mesh=None):
+    logits, new_states = forward(params, cfg, token, constrain, mesh,
+                                 states=states)
+    return logits[:, -1], new_states

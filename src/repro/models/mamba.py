@@ -1,0 +1,113 @@
+"""Falcon-Mamba-7B: attention-free Mamba-1 stack (64 layers, d_state=16)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.layers import embedding as emb
+from repro.layers import ssm as ssm_lib
+from repro.layers.common import norm_apply, norm_init
+
+
+def _layer_init(key, cfg: ArchConfig):
+    params, specs = {}, {}
+    norm_init(cfg.norm_type, cfg.d_model, "norm", params, specs)
+    ssm_lib.ssm_init(key, cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv,
+                     cfg.dt_rank(), params, specs)
+    return params, specs
+
+
+def init_params(key, cfg: ArchConfig) -> Tuple[Dict, Dict]:
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    k_emb, k_layers = jax.random.split(key)
+    emb.embed_init(k_emb, cfg.vocab_size, cfg.d_model, params, specs,
+                   cfg.tie_embeddings)
+    norm_init(cfg.norm_type, cfg.d_model, "norm_final", params, specs)
+    params["layers"] = jax.vmap(lambda k: _layer_init(k, cfg)[0])(
+        jax.random.split(k_layers, cfg.n_layers))
+    _, lspec = _layer_init(k_layers, cfg)
+    specs["layers"] = jax.tree_util.tree_map(
+        lambda s: ("layers",) + s, lspec, is_leaf=lambda s: isinstance(s, tuple))
+    return params, specs
+
+
+def forward(params, cfg: ArchConfig, tokens, constrain, mesh=None,
+            train: bool = False, states: Optional[Dict] = None):
+    x = emb.embed_tokens(params, tokens)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    def step(carry, scanned):
+        h = carry
+        if states is None:
+            p = scanned
+            y, _ = ssm_lib.ssm_apply(
+                p, norm_apply(cfg.norm_type, h, p, "norm"), None,
+                cfg.d_state, cfg.dt_rank())
+            return h + y, None
+        p, st = scanned
+        y, nst = ssm_lib.ssm_apply(
+            p, norm_apply(cfg.norm_type, h, p, "norm"), st,
+            cfg.d_state, cfg.dt_rank())
+        return h + y, nst
+
+    body = step
+    if train and cfg.remat != "none":
+        body = jax.checkpoint(step)
+
+    def run_stack(carry, stacked):
+        if cfg.scan_layers:
+            return jax.lax.scan(body, carry, stacked)
+        ys = []
+        for i in range(cfg.n_layers):
+            sl = jax.tree_util.tree_map(lambda a: a[i], stacked)
+            carry, y = body(carry, sl)
+            ys.append(y)
+        if ys and ys[0] is not None:
+            ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+        else:
+            ys = None
+        return carry, ys
+
+    if states is None:
+        x, _ = run_stack(x, params["layers"])
+        new_states = None
+    else:
+        x, new_layer_states = run_stack(
+            x, (params["layers"], states["layers"]))
+        new_states = {"layers": new_layer_states, "len": states["len"] + 1}
+    x = norm_apply(cfg.norm_type, x, params, "norm_final")
+    logits = emb.logits_head(params, x)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return logits, new_states
+
+
+def loss_fn(params, cfg: ArchConfig, batch, constrain, mesh=None):
+    logits, _ = forward(params, cfg, batch["tokens"], constrain, mesh, True)
+    return emb.cross_entropy(logits, batch["labels"])
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "layers": {
+            "h": jnp.zeros((cfg.n_layers, batch, cfg.d_inner, cfg.d_state),
+                           jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1, cfg.d_inner),
+                              dtype),
+        },
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg, tokens, constrain, mesh=None):
+    logits, _ = forward(params, cfg, tokens, constrain, mesh, train=False)
+    return logits[:, -1]
+
+
+def decode_step(params, cfg, token, states, constrain, mesh=None):
+    logits, new_states = forward(params, cfg, token, constrain, mesh,
+                                 train=False, states=states)
+    return logits[:, -1], new_states

@@ -1,0 +1,152 @@
+"""Unified model API: build any assigned architecture from its ArchConfig.
+
+``build(cfg)`` returns a ``ModelBundle`` of pure functions:
+    init(rng)                      -> (params, logical_specs)
+    loss(params, batch)            -> scalar          (train step body)
+    prefill(params, batch)         -> last-token logits
+    init_state(batch, max_len)     -> decode cache/state pytree
+    decode(params, token, state)   -> (logits, new state)
+    input_specs(shape)             -> ShapeDtypeStruct batch for the dry-run
+plus ``state_specs``/``batch_specs`` logical-axis trees for sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import lstm_lm, mamba, recurrentgemma, transformer, whisper
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable  # (params, batch, constrain, mesh) -> scalar
+    prefill: Callable
+    init_state: Callable
+    decode: Callable
+    input_specs: Callable  # (ShapeCell,) -> dict of ShapeDtypeStruct
+
+
+def _tokens_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    B, S = cell.global_batch, cell.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cell.kind == "train":
+        batch = {"tokens": tok, "labels": tok}
+        if cfg.family == "vlm":
+            S_text = S - cfg.n_frontend_tokens
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((B, S_text), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S_text), jnp.int32),
+                "frontend_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16),
+            }
+        if cfg.family == "encdec":
+            batch = {
+                "tokens": tok,
+                "labels": tok,
+                "frontend_embeds": jax.ShapeDtypeStruct(
+                    (B, whisper.N_FRAMES, cfg.d_model), jnp.bfloat16),
+            }
+        return batch
+    if cell.kind == "prefill":
+        batch = {"tokens": tok}
+        if cfg.family == "vlm":
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+            batch["tokens"] = jax.ShapeDtypeStruct(
+                (B, S - cfg.n_frontend_tokens), jnp.int32)
+        if cfg.family == "encdec":
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, whisper.N_FRAMES, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token + a seq_len-deep cache
+    return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+
+        def prefill_fn(params, batch, constrain, mesh=None):
+            return transformer.prefill(
+                params, cfg, batch["tokens"], constrain, mesh,
+                frontend_embeds=batch.get("frontend_embeds"))
+
+        def init_state(batch, max_len, quantized=False):
+            return transformer.init_decode_cache(
+                cfg, batch, max_len, quantized=quantized)
+
+        def decode_fn(params, token, state, constrain, mesh=None):
+            return transformer.decode_step(
+                params, cfg, token, state, constrain, mesh)
+
+        def loss(params, batch, constrain, mesh=None):
+            return transformer.loss_fn(params, cfg, batch, constrain, mesh)
+
+        init = functools.partial(transformer.init_params, cfg=cfg)
+    elif fam == "hybrid":
+        mod = recurrentgemma
+        prefill_fn = lambda p, b, c, mesh=None: recurrentgemma.prefill(
+            p, cfg, b["tokens"], c, mesh)
+        init_state = lambda batch, max_len, quantized=False: (
+            recurrentgemma.init_decode_state(
+                cfg, batch, min(cfg.attn_window, max_len)))
+        decode_fn = lambda p, t, s, c, mesh=None: recurrentgemma.decode_step(
+            p, cfg, t, s, c, mesh)
+        loss = lambda p, b, c, mesh=None: recurrentgemma.loss_fn(
+            p, cfg, b, c, mesh)
+        init = functools.partial(recurrentgemma.init_params, cfg=cfg)
+    elif fam == "ssm":
+        mod = mamba
+        prefill_fn = lambda p, b, c, mesh=None: mamba.prefill(
+            p, cfg, b["tokens"], c, mesh)
+        init_state = lambda batch, max_len, quantized=False: (
+            mamba.init_decode_state(cfg, batch))
+        decode_fn = lambda p, t, s, c, mesh=None: mamba.decode_step(
+            p, cfg, t, s, c, mesh)
+        loss = lambda p, b, c, mesh=None: mamba.loss_fn(p, cfg, b, c, mesh)
+        init = functools.partial(mamba.init_params, cfg=cfg)
+    elif fam == "encdec":
+        mod = whisper
+        prefill_fn = lambda p, b, c, mesh=None: whisper.prefill(
+            p, cfg, b["tokens"], b["frontend_embeds"], c, mesh)
+        init_state = lambda batch, max_len, quantized=False: (
+            whisper.init_decode_state(cfg, batch, max_len))
+        decode_fn = lambda p, t, s, c, mesh=None: whisper.decode_step(
+            p, cfg, t, s, c, mesh)
+        loss = lambda p, b, c, mesh=None: whisper.loss_fn(p, cfg, b, c, mesh)
+        init = functools.partial(whisper.init_params, cfg=cfg)
+    elif fam == "lstm":
+        mod = lstm_lm
+        prefill_fn = lambda p, b, c, mesh=None: lstm_lm.prefill(
+            p, cfg, b["tokens"], c, mesh)
+        init_state = lambda batch, max_len, quantized=False: (
+            lstm_lm.init_decode_state(cfg, batch))
+        decode_fn = lambda p, t, s, c, mesh=None: lstm_lm.decode_step(
+            p, cfg, t, s, c, mesh)
+        loss = lambda p, b, c, mesh=None: lstm_lm.loss_fn(p, cfg, b, c, mesh)
+        init = functools.partial(lstm_lm.init_params, cfg=cfg)
+    else:
+        raise ValueError(fam)
+
+    return ModelBundle(
+        cfg=cfg,
+        init=init,
+        loss=loss,
+        prefill=prefill_fn,
+        init_state=init_state,
+        decode=decode_fn,
+        input_specs=functools.partial(_tokens_specs, cfg),
+    )
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params)
+               if hasattr(x, "size"))

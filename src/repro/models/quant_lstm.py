@@ -1,0 +1,195 @@
+"""Integer-only LSTM execution (the paper's core contribution, sec 3.2).
+
+Every tensor op here is integer: int8 matmuls into int32 accumulators,
+fixed-point rescales (SRDHM + shifts), int16 gemmlowp transcendentals, and
+the exact limb-based integer LayerNorm.  The only float touchpoints are the
+boundary helpers ``quantize_input`` / ``dequantize_output``.
+
+Also implements the *hybrid* baseline ([Alvarez et al. 2016] / TFLite dynamic
+range): int8 weights with on-the-fly float-range activation quantization --
+the comparison row in the paper's Table 1.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fp
+from repro.core import integer_ops as iops
+from repro.core.recipe import QLSTMSpec
+
+
+def quantize_input(x: jax.Array, scale: float, zero_point: int) -> jax.Array:
+    q = jnp.round(x / scale) + zero_point
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def dequantize_output(q: jax.Array, scale: float, zero_point: int) -> jax.Array:
+    return (q.astype(jnp.float32) - zero_point) * scale
+
+
+def _gate_accumulators(
+    arrays: Dict[str, Any],
+    spec: QLSTMSpec,
+    g: str,
+    x_q: jax.Array,
+    h_q: jax.Array,
+    c_q: Optional[jax.Array],
+) -> jax.Array:
+    """Integer gate pre-activation -> int16 (fig 3 / fig 6 execution)."""
+    gs = spec.gate_spec(g)
+    acc_x = iops.matmul_i8_i32(x_q, arrays["W"][g]) + arrays["fold_x"][g]
+    acc_h = iops.matmul_i8_i32(h_q, arrays["R"][g]) + arrays["fold_hb"][g]
+    gate = fp.multiply_by_quantized_multiplier(acc_x, *gs.eff_x)
+    gate = fp.saturating_add_i32(
+        gate, fp.multiply_by_quantized_multiplier(acc_h, *gs.eff_h)
+    )
+    if gs.eff_c is not None and c_q is not None:
+        acc_c = iops.matmul_i16_elementwise(arrays["P"][g], c_q)
+        gate = fp.saturating_add_i32(
+            gate, fp.multiply_by_quantized_multiplier(acc_c, *gs.eff_c)
+        )
+    return fp.saturate_i16(gate)
+
+
+def _gate(
+    arrays: Dict[str, Any],
+    spec: QLSTMSpec,
+    g: str,
+    x_q: jax.Array,
+    h_q: jax.Array,
+    c_q: Optional[jax.Array],
+) -> jax.Array:
+    """Gate pre-activation in Q3.12 int16 (after optional integer LN)."""
+    gate16 = _gate_accumulators(arrays, spec, g, x_q, h_q, c_q)
+    if spec.use_layernorm:
+        gs = spec.gate_spec(g)
+        gate16 = iops.integer_layernorm(
+            gate16,
+            arrays["L"][g],
+            arrays["Lb"][g],
+            gs.ln_out[0],
+            gs.ln_out[1],
+        )
+    return gate16
+
+
+def quant_lstm_cell(
+    arrays: Dict[str, Any],
+    spec: QLSTMSpec,
+    x_q: jax.Array,
+    h_q: jax.Array,
+    c_q: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """One integer LSTM step.  x_q: int8 (B, d_in); h_q: int8; c_q: int16.
+
+    Returns (h_new int8, c_new int16).
+    """
+    n_c = 15 - spec.cell_int_bits  # fractional bits of the cell state
+
+    f16 = _gate(arrays, spec, "f", x_q, h_q, c_q)
+    f_act = fp.sigmoid_q15(f16, 3).astype(jnp.int32)  # Q0.15
+    z16 = _gate(arrays, spec, "z", x_q, h_q, None)
+    z_act = fp.tanh_q15(z16, 3).astype(jnp.int32)  # Q0.15
+
+    if spec.use_cifg:
+        # i = 1 - f in Q0.15: 32768 - f, clamped into int16 (sec 3.2.9)
+        i_act = jnp.minimum(jnp.int32(32768) - f_act, jnp.int32(32767))
+    else:
+        i16 = _gate(arrays, spec, "i", x_q, h_q, c_q)
+        i_act = fp.sigmoid_q15(i16, 3).astype(jnp.int32)
+
+    # c_t = shift(i*z, 30 - n_c) + shift(f*c, 15)   (sec 3.2.7, fig 12)
+    iz = i_act * z_act  # Q0.30, |.| <= 2**30
+    fc = f_act * c_q.astype(jnp.int32)  # Q0.15 * cell-units
+    c_new = fp.saturating_add_i32(
+        fp.rounding_divide_by_pot(iz, 30 - n_c),
+        fp.rounding_divide_by_pot(fc, 15),
+    )
+    c_new = fp.saturate_i16(c_new)
+
+    o16 = _gate(arrays, spec, "o", x_q, h_q, c_new)
+    o_act = fp.sigmoid_q15(o16, 3).astype(jnp.int32)
+
+    # m = o (.) tanh(c): tanh consumes the cell's own Q_{m.15-m} directly
+    # (sec 3.2.2: no rescale to Q3.12; tanh_fp handles any integer_bits >= 0)
+    g_c = fp.tanh_q15(c_new, spec.cell_int_bits).astype(jnp.int32)
+    m_raw = o_act * g_c  # Q0.30
+    m_q = fp.multiply_by_quantized_multiplier(m_raw, *spec.eff_m) + jnp.int32(
+        spec.zp_m
+    )
+    m_q = fp.saturate_i8(m_q)
+
+    if spec.use_projection:
+        acc = iops.matmul_i8_i32(m_q, arrays["W_proj"]) + arrays["fold_proj"]
+        h_new = fp.multiply_by_quantized_multiplier(acc, *spec.eff_proj)
+        h_new = fp.saturate_i8(h_new + jnp.int32(spec.zp_h_out))
+    else:
+        h_new = m_q
+    return h_new, c_new
+
+
+def quant_lstm_layer(
+    arrays: Dict[str, Any],
+    spec: QLSTMSpec,
+    xs_q: jax.Array,
+    h0_q: Optional[jax.Array] = None,
+    c0_q: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Integer layer over time.  xs_q: int8 (B, T, d_in) -> int8 (B, T, d_out)."""
+    B = xs_q.shape[0]
+    d_out = spec.cfg_d_proj if spec.use_projection else spec.cfg_d_hidden
+    if h0_q is None:
+        h0_q = jnp.full((B, d_out), spec.zp_h_out, jnp.int8)
+    if c0_q is None:
+        c0_q = jnp.zeros((B, spec.cfg_d_hidden), jnp.int16)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = quant_lstm_cell(arrays, spec, x_t, h, c)
+        return (h, c), h
+
+    (h, c), ys = jax.lax.scan(step, (h0_q, c0_q), jnp.swapaxes(xs_q, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), (h, c)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid baseline (dynamic-range quantization; Table 1 middle rows)
+# ---------------------------------------------------------------------------
+
+
+def hybrid_matmul(x: jax.Array, w_q: jax.Array, s_w: float) -> jax.Array:
+    """Dynamic-range hybrid matmul: float activations quantized on the fly.
+
+    Per-batch symmetric int8 activation quantization, int8 matmul, float
+    dequantization -- the [6]-style baseline the paper improves upon.
+    """
+    max_abs = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    s_x = max_abs / 127.0
+    x_q = jnp.clip(jnp.round(x / s_x), -127, 127).astype(jnp.int8)
+    acc = iops.matmul_i8_i32(x_q, w_q)
+    return acc.astype(jnp.float32) * (s_x * s_w)
+
+
+def hybrid_weights(params: Dict[str, Any]) -> Tuple[Dict[str, Any], Dict[str, float]]:
+    """Pre-quantize all matmul weights to symmetric int8 (stored once)."""
+    import numpy as np
+
+    wq: Dict[str, Any] = {"W": {}, "R": {}}
+    scales: Dict[str, float] = {}
+    for kind in ("W", "R"):
+        for g, w in params[kind].items():
+            w = np.asarray(w, np.float64)
+            s = max(np.abs(w).max(), 1e-8) / 127.0
+            wq[kind][g] = jnp.asarray(
+                np.clip(np.round(w / s), -127, 127), jnp.int8
+            )
+            scales[f"{kind}_{g}"] = float(s)
+    if "W_proj" in params:
+        w = np.asarray(params["W_proj"], np.float64)
+        s = max(np.abs(w).max(), 1e-8) / 127.0
+        wq["W_proj"] = jnp.asarray(np.clip(np.round(w / s), -127, 127), jnp.int8)
+        scales["W_proj"] = float(s)
+    return wq, scales

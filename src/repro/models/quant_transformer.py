@@ -1,0 +1,117 @@
+"""Paper recipe applied to transformer serving: int8 weights + int8 KV cache.
+
+``quantize_bundle`` wraps any ModelBundle so that:
+  * every large (>=2D, >=16k-element) float weight becomes {"q": int8,
+    "s": f32 per-channel} -- symmetric max/127, Table-2's weight rule;
+  * embedding rows quantize per-row (gather stays int8 in HBM);
+  * the decode KV cache stores int8 with per-(pos, head) scales
+    (``quantized=True`` plumbing in the cache init + attention).
+
+The forward code paths consume either representation transparently via
+repro.layers.qmm, so the same model definition serves both precisions --
+the "first-class feature" integration of the paper's technique.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import qmm
+from repro.models.model_zoo import ModelBundle
+
+# whitelist of weight-matrix leaf names (per Table 2's weight rule); routers
+# stay f32 (production MoE practice), norms/biases/dynamics params untouched
+_WEIGHT_NAMES = (
+    "wq", "wk", "wv", "wo", "mlp_gate", "mlp_up", "mlp_down", "moe_gate",
+    "moe_up", "moe_down", "shared_gate", "shared_up", "shared_down",
+    "embedding", "lm_head", "in_proj", "x_proj", "dt_proj", "out_proj",
+    "rg_in", "rg_gate_r", "rg_gate_i", "rg_out", "W_proj",
+    "self_wq", "self_wk", "self_wv", "self_wo",
+    "cross_wq", "cross_wk", "cross_wv", "cross_wo",
+)
+_MIN_SIZE = 1 << 14
+
+
+def _should_quantize(path: str, leaf) -> bool:
+    name = path.rsplit("/", 1)[-1]
+    if name not in _WEIGHT_NAMES:
+        return False
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if leaf.dtype not in (jnp.bfloat16, jnp.float32, jnp.float16):
+        return False
+    return int(leaf.size) >= _MIN_SIZE
+
+
+def quantize_param_tree(params) -> Any:
+    """Concrete (traceable) int8 per-channel quantization of a param tree.
+
+    Scales reduce ONLY the contraction dim (-2 for ``x @ w`` weights, -1 for
+    the embedding's gather/logits dual use), preserving every leading stack
+    dim -- so scan-over-layers slicing stays structurally intact:
+    {"q": (L, in, out), "s": (L, out)} slices to {"q": (in, out), "s": (out,)}.
+    """
+
+    def walk(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if _should_quantize(key, leaf):
+            wf = leaf.astype(jnp.float32)
+            if "embedding" in key:  # (vocab, d): per-row
+                s = jnp.maximum(jnp.max(jnp.abs(wf), axis=-1), 1e-8) / 127.0
+                q = jnp.clip(jnp.round(wf / s[..., None]), -127, 127)
+                return {"q": q.astype(jnp.int8), "s": s}
+            s = jnp.maximum(jnp.max(jnp.abs(wf), axis=-2), 1e-8) / 127.0
+            q = jnp.clip(jnp.round(wf / s[..., None, :]), -127, 127)
+            return {"q": q.astype(jnp.int8), "s": s}
+        return leaf
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = [walk(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def quantize_specs(specs, params_shapes) -> Any:
+    """Mirror the logical-spec tree for quantized leaves."""
+
+    def walk(path, spec_leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        return spec_leaf
+
+    # spec trees parallel the params tree but with tuple leaves; quantized
+    # leaves expand to {"q": spec, "s": (spec[-1] or None,)}
+    def expand(spec, shape_leaf, key):
+        if _should_quantize(key, shape_leaf):
+            if "embedding" in key:
+                return {"q": spec, "s": spec[:-1] if spec else (None,)}
+            return {"q": spec,
+                    "s": (spec[:-2] + spec[-1:]) if spec else (None,)}
+        return spec
+
+    flat_shapes, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    flat_specs = treedef.flatten_up_to(specs)
+    out = []
+    for (path, shape_leaf), spec in zip(flat_shapes, flat_specs):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append(expand(spec, shape_leaf, key))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantize_bundle(bundle: ModelBundle) -> ModelBundle:
+    orig_init = bundle.init
+
+    def init(key):
+        params, specs = orig_init(key)
+        qparams = quantize_param_tree(params)
+        qspecs = quantize_specs(specs, params)
+        return qparams, qspecs
+
+    def init_state(batch, max_len, quantized=True):
+        return bundle.init_state(batch, max_len, quantized=True)
+
+    return dataclasses.replace(bundle, init=init, init_state=init_state)

@@ -1,0 +1,196 @@
+"""RecurrentGemma-9B style hybrid: (RG-LRU, RG-LRU, local-attention) pattern.
+
+38 layers = 12 x (rec, rec, attn) + (rec, rec).  Recurrent layers carry a
+(B, d_rnn) state + conv cache; attention layers use a sliding-window (2048)
+MQA cache, so decode state is O(window) -- the arch is sub-quadratic and runs
+the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.layers import attention as attn_lib
+from repro.layers import embedding as emb
+from repro.layers import recurrent as rec
+from repro.layers.common import norm_apply, norm_init
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.layers.rotary import apply_rope
+
+
+def _rec_layer_init(key, cfg: ArchConfig):
+    params, specs = {}, {}
+    ks = jax.random.split(key, 3)
+    norm_init(cfg.norm_type, cfg.d_model, "norm_mix", params, specs)
+    norm_init(cfg.norm_type, cfg.d_model, "norm_mlp", params, specs)
+    rec.rglru_init(ks[0], cfg.d_model, cfg.d_rnn, cfg.d_conv, params, specs)
+    mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, params, specs)
+    return params, specs
+
+
+def _attn_layer_init(key, cfg: ArchConfig):
+    from repro.models.transformer import _layer_init
+
+    return _layer_init(key, cfg, moe_layer=False)
+
+
+def init_params(key, cfg: ArchConfig) -> Tuple[Dict, Dict]:
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    k_emb, k_rec, k_attn = jax.random.split(key, 3)
+    emb.embed_init(k_emb, cfg.vocab_size, cfg.d_model, params, specs,
+                   cfg.tie_embeddings)
+    norm_init(cfg.norm_type, cfg.d_model, "norm_final", params, specs)
+    n_rec, n_attn = _layer_counts(cfg)
+    params["rec_layers"] = jax.vmap(lambda k: _rec_layer_init(k, cfg)[0])(
+        jax.random.split(k_rec, n_rec))
+    _, rspec = _rec_layer_init(k_rec, cfg)
+    specs["rec_layers"] = jax.tree_util.tree_map(
+        lambda s: ("layers",) + s, rspec, is_leaf=lambda s: isinstance(s, tuple))
+    params["attn_layers"] = jax.vmap(lambda k: _attn_layer_init(k, cfg)[0])(
+        jax.random.split(k_attn, n_attn))
+    _, aspec = _attn_layer_init(k_attn, cfg)
+    specs["attn_layers"] = jax.tree_util.tree_map(
+        lambda s: ("layers",) + s, aspec, is_leaf=lambda s: isinstance(s, tuple))
+    return params, specs
+
+
+def _layer_counts(cfg: ArchConfig) -> Tuple[int, int]:
+    """(n_recurrent, n_attention) for the 1-attn:2-rec pattern."""
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    full = cfg.n_layers // len(pat)
+    rem = cfg.n_layers - full * len(pat)
+    n_attn = full * pat.count("attn") + sum(1 for p in pat[:rem] if p == "attn")
+    return cfg.n_layers - n_attn, n_attn
+
+
+def _rec_block(p, cfg, x, state, train):
+    h, new_state = rec.rglru_apply(
+        p, norm_apply(cfg.norm_type, x, p, "norm_mix"), state)
+    x = x + h
+    y = mlp_apply(p, norm_apply(cfg.norm_type, x, p, "norm_mlp"), cfg.mlp_type)
+    return x + y, new_state
+
+
+def _attn_block(p, cfg, x, positions, constrain, cache, train):
+    from repro.models.transformer import _block
+
+    h, _, new_cache = _block(p, cfg, x, positions, constrain, None, False,
+                             train, cache=cache)
+    return h, new_cache
+
+
+def forward(params, cfg: ArchConfig, tokens, constrain, mesh=None,
+            train: bool = False, states: Optional[Dict] = None):
+    """Interleaved pattern executed as: scan(rec pairs) interspersed with
+    attention layers.  For HLO compactness we scan the two homogeneous stacks
+    in pattern order: rec layers are consumed two-at-a-time around each attn
+    layer (matching the (rec, rec, attn) repeating unit)."""
+    x = emb.embed_tokens(params, tokens)
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(x.shape[1])
+    n_rec, n_attn = _layer_counts(cfg)
+
+    rec_states = states["rec"] if states is not None else None
+    attn_caches = states["attn"] if states is not None else None
+    pos = states["len"] if states is not None else None
+    new_rec, new_attn = [], []
+
+    ri, ai = 0, 0
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    for li in range(cfg.n_layers):
+        kind = pat[li % len(pat)]
+        if kind == "rec" and ri < n_rec:
+            p = jax.tree_util.tree_map(lambda a: a[ri], params["rec_layers"])
+            st = None
+            if rec_states is not None:
+                st = jax.tree_util.tree_map(lambda a: a[ri], rec_states)
+            x, nst = _rec_block(p, cfg, x, st, train)
+            if nst is not None:
+                new_rec.append(nst)
+            ri += 1
+        else:
+            p = jax.tree_util.tree_map(lambda a: a[ai], params["attn_layers"])
+            cache = None
+            if attn_caches is not None:
+                cache = {
+                    "k": attn_caches["k"][ai],
+                    "v": attn_caches["v"][ai],
+                    "pos": pos,
+                }
+            if cache is None:
+                x2, _ = _attn_forward_train(p, cfg, x, positions, constrain)
+            else:
+                x2, ncache = _attn_forward_decode(p, cfg, x, cache, constrain)
+                new_attn.append(ncache)
+            x = x2
+            ai += 1
+    x = norm_apply(cfg.norm_type, x, params, "norm_final")
+    logits = emb.logits_head(params, x)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    new_states = None
+    if states is not None:
+        new_states = {
+            "rec": jax.tree_util.tree_map(lambda *a: jnp.stack(a), *new_rec),
+            "attn": jax.tree_util.tree_map(lambda *a: jnp.stack(a), *new_attn),
+            "len": pos + 1,
+        }
+    return logits, new_states
+
+
+def _attn_forward_train(p, cfg, x, positions, constrain):
+    from repro.models.transformer import _attention_block
+    from repro.layers.mlp import mlp_apply
+
+    h, _ = _attention_block(
+        p, cfg, norm_apply(cfg.norm_type, x, p, "norm_attn"), positions,
+        constrain, None)
+    x = x + h
+    y = mlp_apply(p, norm_apply(cfg.norm_type, x, p, "norm_mlp"), cfg.mlp_type)
+    return x + y, None
+
+
+def _attn_forward_decode(p, cfg, x, cache, constrain):
+    from repro.models.transformer import _attention_block
+
+    h, ncache = _attention_block(
+        p, cfg, norm_apply(cfg.norm_type, x, p, "norm_attn"),
+        jnp.reshape(cache["pos"], (1,)), constrain, cache)
+    x = x + h
+    y = mlp_apply(p, norm_apply(cfg.norm_type, x, p, "norm_mlp"), cfg.mlp_type)
+    return x + y, ncache
+
+
+def loss_fn(params, cfg: ArchConfig, batch, constrain, mesh=None):
+    logits, _ = forward(params, cfg, batch["tokens"], constrain, mesh, True)
+    return emb.cross_entropy(logits, batch["labels"])
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, window: int,
+                      dtype=jnp.bfloat16):
+    n_rec, n_attn = _layer_counts(cfg)
+    return {
+        "rec": {
+            "h": jnp.zeros((n_rec, batch, cfg.d_rnn), jnp.float32),
+            "conv": jnp.zeros((n_rec, batch, cfg.d_conv - 1, cfg.d_rnn), dtype),
+        },
+        "attn": {
+            "k": jnp.zeros((n_attn, batch, window, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((n_attn, batch, window, cfg.n_kv_heads, cfg.head_dim), dtype),
+        },
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg, tokens, constrain, mesh=None):
+    logits, _ = forward(params, cfg, tokens, constrain, mesh, train=False)
+    return logits[:, -1]
+
+
+def decode_step(params, cfg, token, states, constrain, mesh=None):
+    logits, new_states = forward(params, cfg, token, constrain, mesh,
+                                 train=False, states=states)
+    return logits[:, -1], new_states

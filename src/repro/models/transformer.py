@@ -1,0 +1,394 @@
+"""Decoder-only transformer LM: dense GQA + optional MoE + frontend stubs.
+
+Covers qwen3-4b, stablelm-1.6b, yi-34b, qwen1.5-0.5b, internvl2-2b (patch-
+embedding stub prepended), grok-1-314b and kimi-k2-1t-a32b (MoE).
+
+Layers are scanned (stacked params on a leading "layers" axis) so the HLO
+stays compact for 60+ layer configs; MoE runs expert-parallel via shard_map
+(see repro.layers.moe).  Activation sharding constraints use logical axes
+resolved by the active rule set.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.layers import attention as attn
+from repro.layers import embedding as emb
+from repro.layers import moe as moe_lib
+from repro.layers import qmm
+from repro.layers.common import dense_init, norm_apply, norm_init, rmsnorm
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.layers.rotary import apply_rope
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ArchConfig, moe_layer: bool) -> Tuple[Dict, Dict]:
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    ks = jax.random.split(key, 12)
+    d, H, KVH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    norm_init(cfg.norm_type, d, "norm_attn", params, specs)
+    norm_init(cfg.norm_type, d, "norm_mlp", params, specs)
+    params["wq"], specs["wq"] = dense_init(ks[0], (d, H * hd), ("embed", "heads"))
+    params["wk"], specs["wk"] = dense_init(ks[1], (d, KVH * hd), ("embed", "kv"))
+    params["wv"], specs["wv"] = dense_init(ks[2], (d, KVH * hd), ("embed", "kv"))
+    params["wo"], specs["wo"] = dense_init(ks[3], (H * hd, d), ("heads", "embed"))
+    if cfg.qkv_bias:
+        for n, w in (("bq", H * hd), ("bk", KVH * hd), ("bv", KVH * hd)):
+            params[n], specs[n] = jnp.zeros((w,), jnp.bfloat16), ("heads",)
+    if cfg.qk_norm:
+        params["q_norm"], specs["q_norm"] = jnp.ones((hd,), jnp.bfloat16), (None,)
+        params["k_norm"], specs["k_norm"] = jnp.ones((hd,), jnp.bfloat16), (None,)
+    if moe_layer:
+        moe_lib.moe_init(ks[4], d, cfg.moe_d_ff, cfg.n_experts, params, specs)
+        if cfg.n_shared_experts:
+            mlp_init(ks[5], d, cfg.moe_d_ff * cfg.n_shared_experts,
+                     cfg.mlp_type, params, specs, prefix="shared")
+    else:
+        d_ff = cfg.dense_d_ff or cfg.d_ff
+        mlp_init(ks[5], d, d_ff, cfg.mlp_type, params, specs)
+    return params, specs
+
+
+def init_params(key, cfg: ArchConfig) -> Tuple[Dict, Dict]:
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    k_emb, k_layers, k_dense, k_final = jax.random.split(key, 4)
+    emb.embed_init(k_emb, cfg.vocab_size, cfg.d_model, params, specs,
+                   cfg.tie_embeddings)
+    norm_init(cfg.norm_type, cfg.d_model, "norm_final", params, specs)
+
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    moe_layer = cfg.n_experts > 0
+    if cfg.n_dense_layers:
+        dp = jax.vmap(lambda k: _layer_init(k, cfg, moe_layer=False)[0])(
+            jax.random.split(k_dense, cfg.n_dense_layers)
+        )
+        _, dspec = _layer_init(k_dense, cfg, moe_layer=False)
+        params["dense_layers"] = dp
+        specs["dense_layers"] = jax.tree_util.tree_map(
+            lambda s: ("layers",) + s, dspec,
+            is_leaf=lambda s: isinstance(s, tuple),
+        )
+    lp = jax.vmap(lambda k: _layer_init(k, cfg, moe_layer)[0])(
+        jax.random.split(k_layers, n_scan)
+    )
+    _, lspec = _layer_init(k_layers, cfg, moe_layer)
+    params["layers"] = lp
+    specs["layers"] = jax.tree_util.tree_map(
+        lambda s: ("layers",) + s, lspec, is_leaf=lambda s: isinstance(s, tuple)
+    )
+    return params, specs
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def _qk_normalize(cfg, q, k, p):
+    if not cfg.qk_norm:
+        return q, k
+    return rmsnorm(q, p["q_norm"]), rmsnorm(k, p["k_norm"])
+
+
+def _attention_block(
+    p: Dict,
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,  # (S,) or (B, S)
+    constrain: Callable,
+    cache: Optional[Dict] = None,
+    layer_idx: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, d = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = qmm.mm(x, p["wq"])
+    k = qmm.mm(x, p["wk"])
+    v = qmm.mm(x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KVH, hd)
+    v = v.reshape(B, S, KVH, hd)
+    q, k = _qk_normalize(cfg, q, k, p)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv", "head_dim"))
+
+    if cache is None:
+        kr = attn.repeat_kv(k, H // KVH)
+        vr = attn.repeat_kv(v, H // KVH)
+        if S > 1024:
+            o = attn.flash_attention(q, kr, vr, causal=True,
+                                     window=cfg.attn_window)
+        else:
+            o = attn.full_attention(q, kr, vr, causal=True,
+                                    window=cfg.attn_window)
+        new_cache = None
+    else:
+        # decode: ring-buffer write at pos % S_cache (sliding-window caches
+        # wrap; RoPE'd K/V are permutation-invariant under the slot mask)
+        k_cache, v_cache, pos = cache["k"], cache["v"], cache["pos"]
+        s_cache = k_cache.shape[1]
+        wpos = pos % s_cache
+        quantized = k_cache.dtype == jnp.int8
+        if quantized:
+            kq, ks = attn.quantize_kv(k)
+            vq, vs = attn.quantize_kv(v)
+            k_scale = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks.astype(cache["k_scale"].dtype), wpos, axis=1)
+            v_scale = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs.astype(cache["v_scale"].dtype), wpos, axis=1)
+            k, v = kq, vq
+        else:
+            k_scale = v_scale = None
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), wpos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), wpos, axis=1)
+        valid = jnp.minimum(pos + 1, s_cache)
+        o = attn.decode_attention(q, k_cache, v_cache, valid, window=0,
+                                  k_scale=k_scale, v_scale=v_scale)
+        new_cache = {"k": k_cache, "v": v_cache}
+        if quantized:
+            new_cache["k_scale"] = k_scale
+            new_cache["v_scale"] = v_scale
+    o = o.reshape(B, S, H * hd)
+    return qmm.mm(o, p["wo"]), new_cache
+
+
+def _moe_or_mlp(p: Dict, cfg: ArchConfig, x: jax.Array, constrain, mesh,
+                is_moe: bool, train: bool):
+    B, S, d = x.shape
+    if not is_moe:
+        return mlp_apply(p, x, cfg.mlp_type, constrain=constrain), 0.0
+    tokens = x.reshape(B * S, d)
+    aux = 0.0
+    if train:
+        logits = tokens.astype(jnp.float32) @ p["moe_router"]
+        probs = jax.nn.softmax(logits, -1)
+        frac = jnp.mean(
+            jax.nn.one_hot(jnp.argmax(logits, -1), cfg.n_experts), axis=0
+        )
+        aux = cfg.n_experts * jnp.sum(frac * probs.mean(0))
+    if mesh is None or mesh.size == 1:
+        y = moe_lib.moe_apply_local(
+            p, tokens, n_experts=cfg.n_experts, topk=cfg.topk,
+            capacity_factor=cfg.capacity_factor,
+            ep_rank=jnp.int32(0), ep_size=1, model_axis=None,
+        )
+    else:
+        from jax.sharding import PartitionSpec as P
+        from jax import shard_map
+
+        ep = cfg.n_experts % mesh.shape["model"] == 0
+        wspec = P("model", None, None) if ep else P(None, None, "model")
+        dspec = P("model", None, None) if ep else P(None, "model", None)
+        # int8 dict weights {"q": (E,d,f), "s": (E,f)} need matching spec trees
+        wsspec = P("model", None) if ep else P(None, "model")
+        dsspec = P("model", None) if ep else P(None, None)
+
+        def spec_of(w, mat, scale):
+            return {"q": mat, "s": scale} if qmm.is_quant(w) else mat
+
+        gate_spec = spec_of(p["moe_gate"], wspec, wsspec)
+        up_spec = spec_of(p["moe_up"], wspec, wsspec)
+        down_spec = spec_of(p["moe_down"], dspec, dsspec)
+        ep_size = mesh.shape["model"] if ep else 1
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+        def body(router, gate, up, down, toks):
+            rank = jax.lax.axis_index("model") if ep else jnp.int32(0)
+            lp = {"moe_router": router, "moe_gate": gate, "moe_up": up,
+                  "moe_down": down}
+            return moe_lib.moe_apply_local(
+                lp, toks, n_experts=cfg.n_experts, topk=cfg.topk,
+                capacity_factor=cfg.capacity_factor,
+                ep_rank=rank, ep_size=ep_size, model_axis="model",
+            )
+
+        y = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(None, None), gate_spec, up_spec, down_spec,
+                      P(dp_axes, None)),
+            out_specs=P(dp_axes, None),
+            check_vma=False,
+        )(p["moe_router"], p["moe_gate"], p["moe_up"], p["moe_down"], tokens)
+    y = y.reshape(B, S, d)
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p, x, cfg.mlp_type, prefix="shared", constrain=None)
+    return y, aux
+
+
+def _block(p, cfg: ArchConfig, x, positions, constrain, mesh, is_moe, train,
+           cache=None):
+    h, new_cache = _attention_block(p, cfg, norm_apply(cfg.norm_type, x, p, "norm_attn"),
+                                    positions, constrain, cache)
+    x = x + h
+    y, aux = _moe_or_mlp(p, cfg, norm_apply(cfg.norm_type, x, p, "norm_mlp"),
+                         constrain, mesh, is_moe, train)
+    return x + y, aux, new_cache
+
+
+def _run_layers(params, cfg: ArchConfig, x, positions, constrain, mesh,
+                train: bool, caches: Optional[Dict] = None):
+    """Scan over stacked layers (dense prefix first when configured)."""
+    is_moe = cfg.n_experts > 0
+    total_aux = 0.0
+    pos = None if caches is None else caches["len"]
+
+    def mk_step(moe_flag):
+        def step(carry, scanned):
+            h, aux_acc = carry
+            if caches is None:
+                p = scanned
+                h2, aux, _ = _block(p, cfg, h, positions, constrain, mesh,
+                                    moe_flag, train)
+                return (h2, aux_acc + aux), None
+            p, layer_cache = scanned
+            layer_cache = dict(layer_cache, pos=pos)
+            h2, aux, new_cache = _block(p, cfg, h, positions, constrain, mesh,
+                                        moe_flag, train, cache=layer_cache)
+            return (h2, aux_acc + aux), new_cache
+        return step
+
+    remat = cfg.remat != "none" and train
+    remat_policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                    if cfg.remat == "dots" else None)
+
+    def run_stack(step, carry, stacked, n: int):
+        """lax.scan over stacked layers, or an unrolled python loop when
+        cfg.scan_layers=False (the dry-run uses unrolled HLO so that
+        cost_analysis counts every layer; see DESIGN.md 'scan accounting')."""
+        if cfg.scan_layers:
+            return jax.lax.scan(step, carry, stacked)
+        ys = []
+        for i in range(n):
+            sl = jax.tree_util.tree_map(lambda a: a[i], stacked)
+            carry, y = step(carry, sl)
+            ys.append(y)
+        if ys and ys[0] is not None:
+            ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+        else:
+            ys = None
+        return carry, ys
+
+    if cfg.n_dense_layers:
+        step = mk_step(False)
+        if remat:
+            step = jax.checkpoint(step, policy=remat_policy)
+        if caches is None:
+            (x, total_aux), _ = run_stack(
+                step, (x, total_aux), params["dense_layers"],
+                cfg.n_dense_layers)
+        else:
+            (x, total_aux), dense_caches = run_stack(
+                step, (x, total_aux),
+                (params["dense_layers"], caches["dense"]), cfg.n_dense_layers)
+    step = mk_step(is_moe)
+    if remat:
+        step = jax.checkpoint(step, policy=remat_policy)
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    if caches is None:
+        (x, total_aux), _ = run_stack(step, (x, total_aux), params["layers"],
+                                      n_scan)
+        new_caches = None
+    else:
+        (x, total_aux), main_caches = run_stack(
+            step, (x, total_aux), (params["layers"], caches["main"]), n_scan)
+        new_caches = {"main": main_caches, "len": caches["len"] + 1}
+        if cfg.n_dense_layers:
+            new_caches["dense"] = dense_caches
+    return x, total_aux, new_caches
+
+
+def forward(params, cfg: ArchConfig, tokens, constrain, mesh=None,
+            train: bool = False, frontend_embeds: Optional[jax.Array] = None):
+    """tokens (B, S) -> logits (B, S_total, vocab).  ``frontend_embeds``
+    (B, F, d) are prepended (VLM patch stub)."""
+    x = emb.embed_tokens(params, tokens)
+    if frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(x.shape[1])
+    x, aux, _ = _run_layers(params, cfg, x, positions, constrain, mesh, train)
+    x = norm_apply(cfg.norm_type, x, params, "norm_final")
+    logits = emb.logits_head(params, x)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch, constrain, mesh=None):
+    frontend = batch.get("frontend_embeds")
+    logits, aux = forward(params, cfg, batch["tokens"], constrain, mesh,
+                          train=True, frontend_embeds=frontend)
+    if frontend is not None:
+        logits = logits[:, frontend.shape[1]:]
+    loss = emb.cross_entropy(logits, batch["labels"])
+    return loss + 0.01 * aux
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16, quantized: bool = False):
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    kv_dtype = jnp.int8 if quantized else dtype
+
+    def mk(L):
+        c = {
+            "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                           kv_dtype),
+            "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                           kv_dtype),
+        }
+        if quantized:
+            c["k_scale"] = jnp.ones((L, batch, max_len, cfg.n_kv_heads),
+                                    jnp.float16)
+            c["v_scale"] = jnp.ones((L, batch, max_len, cfg.n_kv_heads),
+                                    jnp.float16)
+        return c
+
+    cache = {"main": mk(n_scan), "len": jnp.zeros((), jnp.int32)}
+    if cfg.n_dense_layers:
+        cache["dense"] = mk(cfg.n_dense_layers)
+    return cache
+
+
+def prefill(params, cfg: ArchConfig, tokens, constrain, mesh=None,
+            max_len: Optional[int] = None,
+            frontend_embeds: Optional[jax.Array] = None):
+    """Run the prompt, return (last-token logits).  For the dry-run cells the
+    cache write-back is elided (prefill_32k measures prompt processing)."""
+    logits, _ = forward(params, cfg, tokens, constrain, mesh, train=False,
+                        frontend_embeds=frontend_embeds)
+    return logits[:, -1]
+
+
+def decode_step(params, cfg: ArchConfig, token, caches, constrain, mesh=None):
+    """token (B, 1) + caches -> (logits (B, vocab), new caches)."""
+    x = emb.embed_tokens(params, token)
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.reshape(caches["len"], (1,))
+    x, _, new_caches = _run_layers(params, cfg, x, positions, constrain, mesh,
+                                   train=False, caches=caches)
+    x = norm_apply(cfg.norm_type, x, params, "norm_final")
+    logits = emb.logits_head(params, x[:, -1])
+    logits = constrain(logits, ("batch", "vocab"))
+    return logits, new_caches

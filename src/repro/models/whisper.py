@@ -1,0 +1,189 @@
+"""Whisper-tiny backbone: encoder-decoder transformer with stubbed frontend.
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, n_frames, d_model).  The encoder is
+bidirectional; the decoder has causal self-attention + cross-attention with
+learned positions (no RoPE), matching the Whisper architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.layers import attention as attn_lib
+from repro.layers import embedding as emb
+from repro.layers.common import dense_init, layernorm, norm_init
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.layers.qmm import mm
+
+MAX_TEXT_POS = 32768 + 8
+N_FRAMES = 1500
+
+
+def _attn_init(key, d: int, H: int, prefix: str, params, specs):
+    ks = jax.random.split(key, 4)
+    hd = d // H
+    params[f"{prefix}_wq"], specs[f"{prefix}_wq"] = dense_init(ks[0], (d, d), ("embed", "heads"))
+    params[f"{prefix}_wk"], specs[f"{prefix}_wk"] = dense_init(ks[1], (d, d), ("embed", "heads"))
+    params[f"{prefix}_wv"], specs[f"{prefix}_wv"] = dense_init(ks[2], (d, d), ("embed", "heads"))
+    params[f"{prefix}_wo"], specs[f"{prefix}_wo"] = dense_init(ks[3], (d, d), ("heads", "embed"))
+
+
+def _enc_layer_init(key, cfg: ArchConfig):
+    params, specs = {}, {}
+    ks = jax.random.split(key, 2)
+    norm_init("layernorm", cfg.d_model, "norm_attn", params, specs)
+    norm_init("layernorm", cfg.d_model, "norm_mlp", params, specs)
+    _attn_init(ks[0], cfg.d_model, cfg.n_heads, "self", params, specs)
+    mlp_init(ks[1], cfg.d_model, cfg.d_ff, "gelu", params, specs)
+    return params, specs
+
+
+def _dec_layer_init(key, cfg: ArchConfig):
+    params, specs = {}, {}
+    ks = jax.random.split(key, 3)
+    norm_init("layernorm", cfg.d_model, "norm_self", params, specs)
+    norm_init("layernorm", cfg.d_model, "norm_cross", params, specs)
+    norm_init("layernorm", cfg.d_model, "norm_mlp", params, specs)
+    _attn_init(ks[0], cfg.d_model, cfg.n_heads, "self", params, specs)
+    _attn_init(ks[1], cfg.d_model, cfg.n_heads, "cross", params, specs)
+    mlp_init(ks[2], cfg.d_model, cfg.d_ff, "gelu", params, specs)
+    return params, specs
+
+
+def init_params(key, cfg: ArchConfig) -> Tuple[Dict, Dict]:
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    ks = jax.random.split(key, 6)
+    emb.embed_init(ks[0], cfg.vocab_size, cfg.d_model, params, specs, tie=True)
+    params["pos_dec"], specs["pos_dec"] = dense_init(
+        ks[1], (MAX_TEXT_POS, cfg.d_model), (None, "embed"), scale=0.02)
+    # sinusoidal encoder positions (fixed)
+    pos = np.arange(N_FRAMES)[:, None]
+    dim = np.arange(cfg.d_model // 2)[None]
+    ang = pos / (10000 ** (dim / (cfg.d_model // 2)))
+    pe = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    params["pos_enc"], specs["pos_enc"] = (
+        jnp.asarray(pe, jnp.bfloat16), (None, "embed"))
+    norm_init("layernorm", cfg.d_model, "norm_enc_final", params, specs)
+    norm_init("layernorm", cfg.d_model, "norm_dec_final", params, specs)
+    params["enc_layers"] = [
+        _enc_layer_init(k, cfg)[0]
+        for k in jax.random.split(ks[2], cfg.enc_layers)]
+    specs["enc_layers"] = [
+        _enc_layer_init(ks[2], cfg)[1] for _ in range(cfg.enc_layers)]
+    params["dec_layers"] = [
+        _dec_layer_init(k, cfg)[0]
+        for k in jax.random.split(ks[3], cfg.n_layers)]
+    specs["dec_layers"] = [
+        _dec_layer_init(ks[3], cfg)[1] for _ in range(cfg.n_layers)]
+    return params, specs
+
+
+def _mha(p, prefix, xq, xkv, H, causal, cache=None, pos=None):
+    B, Sq, d = xq.shape
+    hd = d // H
+    if xkv is None:
+        xkv = xq  # self-attention
+    q = mm(xq, p[f"{prefix}_wq"]).reshape(B, Sq, H, hd)
+    if cache is not None and prefix == "cross":
+        k, v = cache["k"], cache["v"]  # precomputed encoder K/V
+        o = attn_lib.decode_attention(q, k, v, jnp.int32(k.shape[1]))
+        return mm(o.reshape(B, Sq, d), p[f"{prefix}_wo"]), cache
+    k = mm(xkv, p[f"{prefix}_wk"]).reshape(B, -1, H, hd)
+    v = mm(xkv, p[f"{prefix}_wv"]).reshape(B, -1, H, hd)
+    if cache is not None:  # decode self-attention
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        o = attn_lib.decode_attention(q, kc, vc, pos + 1)
+        return mm(o.reshape(B, Sq, d), p[f"{prefix}_wo"]), {"k": kc, "v": vc}
+    Sk = k.shape[1]
+    if Sk > 2048:
+        o = attn_lib.flash_attention(q, k, v, causal=causal)
+    else:
+        o = attn_lib.full_attention(q, k, v, causal=causal)
+    return mm(o.reshape(B, Sq, d), p[f"{prefix}_wo"]), None
+
+
+def encode(params, cfg: ArchConfig, frames: jax.Array, constrain) -> jax.Array:
+    """frames: (B, N_FRAMES, d_model) precomputed embeddings (frontend stub)."""
+    x = frames + params["pos_enc"][None, : frames.shape[1]]
+    x = constrain(x, ("batch", "seq", "embed"))
+    for p in params["enc_layers"]:
+        h, _ = _mha(p, "self", layernorm(x, p["norm_attn"], p.get("norm_attn_b")),
+                    None, cfg.n_heads, causal=False)
+        x = x + h
+        x = x + mlp_apply(p, layernorm(x, p["norm_mlp"], p.get("norm_mlp_b")),
+                          "gelu")
+    return layernorm(x, params["norm_enc_final"], params.get("norm_enc_final_b"))
+
+
+def decode_train(params, cfg: ArchConfig, tokens, enc_out, constrain):
+    B, S = tokens.shape
+    x = emb.embed_tokens(params, tokens) + params["pos_dec"][None, :S]
+    x = constrain(x, ("batch", "seq", "embed"))
+    for p in params["dec_layers"]:
+        h, _ = _mha(p, "self", layernorm(x, p["norm_self"], p.get("norm_self_b")),
+                    None, cfg.n_heads, causal=True)
+        x = x + h
+        h, _ = _mha(p, "cross", layernorm(x, p["norm_cross"], p.get("norm_cross_b")),
+                    enc_out, cfg.n_heads, causal=False)
+        x = x + h
+        x = x + mlp_apply(p, layernorm(x, p["norm_mlp"], p.get("norm_mlp_b")),
+                          "gelu")
+    x = layernorm(x, params["norm_dec_final"], params.get("norm_dec_final_b"))
+    return emb.logits_head(params, x)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, constrain, mesh=None):
+    enc_out = encode(params, cfg, batch["frontend_embeds"], constrain)
+    logits = decode_train(params, cfg, batch["tokens"], enc_out, constrain)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return emb.cross_entropy(logits, batch["labels"])
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    hd = cfg.d_model // cfg.n_heads
+    return {
+        "self": [{
+            "k": jnp.zeros((batch, max_len, cfg.n_heads, hd), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.n_heads, hd), dtype),
+        } for _ in range(cfg.n_layers)],
+        "cross": [{
+            "k": jnp.zeros((batch, N_FRAMES, cfg.n_heads, hd), dtype),
+            "v": jnp.zeros((batch, N_FRAMES, cfg.n_heads, hd), dtype),
+        } for _ in range(cfg.n_layers)],
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg, tokens, frames, constrain, mesh=None):
+    enc_out = encode(params, cfg, frames, constrain)
+    logits = decode_train(params, cfg, tokens, enc_out, constrain)
+    return logits[:, -1]
+
+
+def decode_step(params, cfg: ArchConfig, token, states, constrain, mesh=None):
+    pos = states["len"]
+    x = emb.embed_tokens(params, token)
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1, axis=0)[None, 0:1]
+    new_self = []
+    for p, sc, cc in zip(params["dec_layers"], states["self"], states["cross"]):
+        h, nsc = _mha(p, "self", layernorm(x, p["norm_self"], p.get("norm_self_b")),
+                      None, cfg.n_heads, causal=True, cache=sc, pos=pos)
+        x = x + h
+        new_self.append(nsc)
+        h, _ = _mha(p, "cross", layernorm(x, p["norm_cross"], p.get("norm_cross_b")),
+                    None, cfg.n_heads, causal=False, cache=cc)
+        x = x + h
+        x = x + mlp_apply(p, layernorm(x, p["norm_mlp"], p.get("norm_mlp_b")),
+                          "gelu")
+    x = layernorm(x, params["norm_dec_final"], params.get("norm_dec_final_b"))
+    logits = emb.logits_head(params, x[:, -1])
+    new_states = {"self": new_self, "cross": states["cross"], "len": pos + 1}
+    return logits, new_states

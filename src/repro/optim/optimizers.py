@@ -1,0 +1,163 @@
+"""Optimizers: AdamW (f32 moments) and Adafactor (factored second moment for
+the 100B+ configs), with global-norm clipping and warmup-cosine schedules.
+
+Written against plain pytrees (no optax dependency in this offline image).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adafactor | sgd
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    floor = cfg.min_lr_ratio
+    return cfg.lr * warm * (floor + (1 - floor) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), norm
+
+
+# --- AdamW -------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mu_hat = mu / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat = nu / (1 - b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "mu": tdef.unflatten([o[1] for o in out]),
+        "nu": tdef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+# --- Adafactor (factored second moments; memory ~ O(n+m) per matrix) ---------
+
+
+def adafactor_init(params):
+    def init(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": jax.tree_util.tree_map(init, params,
+                                    is_leaf=lambda x: hasattr(x, "ndim")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + 1e-30
+        if p.ndim >= 2:
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :]
+                / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)[..., None]
+            )
+            delta = g / jnp.maximum(denom, 1e-30)
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            nv = decay * v["v"] + (1 - decay) * g2
+            delta = g / (jnp.sqrt(nv) + 1e-30)
+            new_v = {"v": nv}
+        # update clipping (Adafactor's d=1.0 RMS rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+        delta = delta / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_state = {"v": tdef.unflatten([o[1] for o in out]), "step": step}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+def make_optimizer(cfg: OptConfig):
+    if cfg.name == "adamw":
+        return adamw_init, lambda g, s, p: adamw_update(cfg, g, s, p)
+    if cfg.name == "adafactor":
+        return adafactor_init, lambda g, s, p: adafactor_update(cfg, g, s, p)
+    raise ValueError(cfg.name)

@@ -1,0 +1,199 @@
+"""Logical-axis sharding rules (MaxText-style) + divisibility-safe resolution.
+
+A *rule set* maps logical axis names to mesh axis names.  ``resolve`` turns a
+logical spec tuple (one entry per tensor dim) into a PartitionSpec, dropping
+any mesh axis whose size does not divide the dimension -- this keeps every
+in_sharding legal (GSPMD requires divisibility for inputs) while degrading
+gracefully for small models on big meshes (e.g. whisper-tiny's 6 heads).
+
+Profiles:
+  dense_small -- TP on heads/mlp/vocab; DP on batch; weights replicated.
+  dense_fsdp  -- dense_small + weights' embed dim sharded over data (ZeRO-3).
+  moe_fsdp    -- dense_fsdp + experts over model (EP) with expert-mlp
+                 fallback TP when n_experts < model size.
+  tiny        -- DP only (whisper-tiny, lstm-rnnt).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+LogicalRules = Tuple[Tuple[str, Tuple[str, ...]], ...]
+
+# data-parallel mesh axes (pod folds into DP on the multi-pod mesh)
+DP = ("pod", "data")
+
+PROFILES: Dict[str, Dict[str, Tuple[str, ...]]] = {
+    "tiny": {
+        "batch": DP,
+        "seq": (),
+        "embed": (),
+        "heads": (),
+        "kv": (),
+        "head_dim": (),
+        "mlp": ("model",),
+        "mlp2": (),
+        "vocab": ("model",),
+        "experts": (),
+        "expert_mlp": (),
+        "layers": (),
+        "state": (),
+    },
+    "dense_small": {
+        "batch": DP,
+        "seq": (),
+        "embed": (),
+        "heads": ("model",),
+        "kv": ("model",),
+        "head_dim": ("model",),  # fallback when kv-heads % model != 0
+        "mlp": ("model",),
+        "mlp2": (),
+        "vocab": ("model",),
+        "experts": (),
+        "expert_mlp": ("model",),
+        "layers": (),
+        "state": (),
+    },
+}
+PROFILES["dense_fsdp"] = dict(PROFILES["dense_small"], embed=("data",))
+PROFILES["moe_fsdp"] = dict(
+    PROFILES["dense_fsdp"], experts=("model",), expert_mlp=("model",),
+)
+
+
+def rules_for(profile: str) -> Dict[str, Tuple[str, ...]]:
+    return PROFILES[profile]
+
+
+def resolve(
+    logical: Optional[Tuple[Optional[str], ...]],
+    shape: Sequence[int],
+    rules: Dict[str, Tuple[str, ...]],
+    mesh: Mesh,
+) -> P:
+    """Logical spec tuple -> PartitionSpec, enforcing divisibility."""
+    if logical is None:
+        return P()
+    assert len(logical) == len(shape), (logical, shape)
+    used = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        if name is None or name not in rules:
+            out.append(None)
+            continue
+        axes = []
+        prod = 1
+        for ax in rules[name]:
+            if ax not in mesh.shape or ax in used:
+                continue
+            if dim % (prod * mesh.shape[ax]) == 0:
+                axes.append(ax)
+                prod *= mesh.shape[ax]
+        used.update(axes)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def tree_shardings(specs_tree, shapes_tree, rules, mesh):
+    """Map parallel (logical-spec, shape) trees to NamedShardings."""
+
+    def leaf(spec, arr):
+        shape = arr.shape if hasattr(arr, "shape") else arr
+        return NamedSharding(mesh, resolve(spec, shape, rules, mesh))
+
+    return jax.tree_util.tree_map(
+        leaf, specs_tree, shapes_tree,
+        is_leaf=lambda s: s is None or (
+            isinstance(s, tuple) and all(isinstance(x, (str, type(None))) for x in s)
+        ),
+    )
+
+
+def make_constrain(rules, mesh):
+    """Returns constrain(x, logical_tuple) applying with_sharding_constraint.
+
+    Degrades to identity when no mesh is active (single-device smoke tests).
+    """
+    if mesh is None or np.prod(list(mesh.shape.values())) == 1:
+        return lambda x, logical=None: x
+
+    def constrain(x, logical=None):
+        if logical is None:
+            return x
+        spec = resolve(tuple(logical), x.shape, rules, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def batch_logical(batch_tree) -> Any:
+    """Default logical specs for an input batch: shard dim0 over DP axes."""
+
+    def leaf(x):
+        nd = len(x.shape)
+        return ("batch",) + (None,) * (nd - 1)
+
+    return jax.tree_util.tree_map(leaf, batch_tree)
+
+
+def state_logical(state_tree) -> Any:
+    """Decode cache/state logical specs, keyed on (leaf name, rank).
+
+    KV caches shard (batch, kv-heads); SSM/RG-LRU states shard (batch, inner
+    dim).  Stacked-layer tensors have the layer dim first; per-layer lists
+    (whisper, lstm) have batch first.
+    """
+
+    def walk(path, x):
+        shape = x.shape
+        nd = len(shape)
+        name = ""
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        if nd == 0:
+            return None
+        if name in ("k", "v"):
+            if nd == 5:  # (L, B, S, KVH, D)
+                return (None, "batch", None, "kv", "head_dim")
+            if nd == 4:  # (B, S, KVH, D)  [whisper lists]
+                return ("batch", None, "kv", "head_dim")
+        if name in ("k_scale", "v_scale"):
+            if nd == 4:  # (L, B, S, KVH)
+                return (None, "batch", None, "kv")
+            if nd == 3:
+                return ("batch", None, "kv")
+        if name == "h":
+            if nd == 4:  # mamba (L, B, d_inner, N)
+                return (None, "batch", "mlp", None)
+            if nd == 3:  # rg-lru (L, B, d_rnn)
+                return (None, "batch", "mlp")
+            if nd == 2:  # lstm (B, d)
+                return ("batch", "mlp")
+        if name == "conv":
+            if nd == 4:  # (L, B, K-1, D)
+                return (None, "batch", None, "mlp")
+            if nd == 3:
+                return ("batch", None, "mlp")
+        if name == "c" and nd == 2:  # lstm cell state
+            return ("batch", "mlp")
+        # fallback: stacked-layer tensors (L, B, ...) vs direct (B, ...)
+        if nd >= 3:
+            return (None, "batch") + (None,) * (nd - 2)
+        return ("batch",) + (None,) * (nd - 1)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [walk(p, l) for p, l in flat])

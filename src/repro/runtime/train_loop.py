@@ -1,0 +1,200 @@
+"""Train-step factory: pjit with logical-rule shardings, grad accumulation,
+optional QAT and int8 error-feedback gradient compression.
+
+Nothing here materializes parameters: shapes come from ``jax.eval_shape`` over
+the model's init (the logical spec tree is captured during the same abstract
+trace), so the factory works for the 1T-param dry-run configs on a CPU host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model_zoo import ModelBundle
+from repro.optim import grad_compress
+from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.runtime import sharding as shlib
+
+
+@dataclasses.dataclass
+class TrainArtifacts:
+    step_fn: Callable  # (params, opt_state, batch) -> (params, opt, metrics)
+    init_opt: Callable
+    param_shardings: Any = None
+    opt_shardings: Any = None
+    batch_shardings: Any = None
+    param_shapes: Any = None
+    logical_specs: Any = None
+
+
+def abstract_init(bundle: ModelBundle, key=None):
+    """(param shapes, logical specs) without materializing any parameter."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    captured = {}
+
+    def arrays_only(k):
+        p, s = bundle.init(k)
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(arrays_only, key)
+    return shapes, captured["specs"]
+
+
+def _is_logical_leaf(x):
+    return x is None or (
+        isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+    )
+
+
+def opt_logical_specs(opt_cfg: OptConfig, params_logical, opt_shapes):
+    """Optimizer-state logical specs derived from the parameter specs."""
+    if opt_cfg.name == "adamw":
+        return {
+            "inner": {"mu": params_logical, "nu": params_logical, "step": None},
+        }
+    if opt_cfg.name == "adafactor":
+        def factored(spec):
+            if spec is None or not isinstance(spec, tuple):
+                return {"v": None}
+            if len(spec) >= 2:
+                return {"vr": spec[:-1], "vc": spec[:-2] + spec[-1:]}
+            return {"v": spec}
+
+        v = jax.tree_util.tree_map(
+            factored, params_logical, is_leaf=_is_logical_leaf)
+        return {"inner": {"v": v, "step": None}}
+    raise ValueError(opt_cfg.name)
+
+
+def make_train_step(
+    bundle: ModelBundle,
+    mesh: Optional[Mesh],
+    opt_cfg: OptConfig,
+    *,
+    microbatches: int = 1,
+    grad_compress_int8: bool = False,
+    qat: bool = False,
+    batch_example: Optional[Dict] = None,
+    donate: bool = True,
+) -> TrainArtifacts:
+    cfg = bundle.cfg
+    rules = shlib.rules_for(cfg.shard_profile)
+    constrain = shlib.make_constrain(rules, mesh)
+    opt_init, opt_update = make_optimizer(opt_cfg)
+
+    def loss_fn(params, batch):
+        if qat and cfg.family == "lstm":
+            from repro.models import lstm_lm
+            return lstm_lm.loss_fn(params, cfg, batch, constrain, mesh, qat=True)
+        return bundle.loss(params, batch, constrain, mesh)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def mb_slice(b, i):
+            return jax.tree_util.tree_map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // microbatches),
+                    x.shape[0] // microbatches, axis=0),
+                b)
+
+        def body(carry, i):
+            loss_acc, grad_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb_slice(batch, i))
+            grad_acc = jax.tree_util.tree_map(
+                lambda a, b_: a + b_.astype(jnp.float32), grad_acc, g)
+            return (loss_acc + l, grad_acc), None
+
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), zero_g), jnp.arange(microbatches))
+        inv = 1.0 / microbatches
+        return loss * inv, jax.tree_util.tree_map(lambda g: g * inv, grads)
+
+    def step_fn(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        if grad_compress_int8:
+            grads, new_resid = grad_compress.ef_compress_tree(
+                grads, opt_state["ef_residual"])
+        new_params, new_inner, metrics = opt_update(
+            grads, opt_state["inner"], params)
+        new_opt = {"inner": new_inner}
+        if grad_compress_int8:
+            new_opt["ef_residual"] = new_resid
+        return new_params, new_opt, dict(metrics, loss=loss)
+
+    def init_opt(params):
+        st = {"inner": opt_init(params)}
+        if grad_compress_int8:
+            st["ef_residual"] = grad_compress.ef_init(params)
+        return st
+
+    donate_args = (0, 1) if donate else ()
+    if mesh is None:
+        return TrainArtifacts(
+            jax.jit(step_fn, donate_argnums=donate_args), init_opt)
+
+    param_shapes, logical = abstract_init(bundle)
+    param_sh = shlib.tree_shardings(logical, param_shapes, rules, mesh)
+    opt_shapes = jax.eval_shape(init_opt, param_shapes)
+    opt_logical = {"inner": opt_logical_specs(opt_cfg, logical, opt_shapes)["inner"]}
+    if grad_compress_int8:
+        opt_logical["ef_residual"] = logical
+    opt_sh = shlib.tree_shardings(opt_logical, opt_shapes, rules, mesh)
+
+    batch_sh = None
+    if batch_example is not None:
+        batch_sh = shlib.tree_shardings(
+            shlib.batch_logical(batch_example), batch_example, rules, mesh)
+
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=donate_args,
+    )
+    return TrainArtifacts(jitted, init_opt, param_sh, opt_sh, batch_sh,
+                          param_shapes, logical)
+
+
+def make_serve_fns(bundle: ModelBundle, mesh: Optional[Mesh],
+                   batch: int, max_len: int, quantized_cache: bool = False):
+    """(prefill_fn, decode_fn, state_shardings, param_shardings)."""
+    cfg = bundle.cfg
+    rules = shlib.rules_for(cfg.shard_profile)
+    constrain = shlib.make_constrain(rules, mesh)
+
+    def prefill_fn(params, b):
+        return bundle.prefill(params, b, constrain, mesh)
+
+    def decode_fn(params, token, state):
+        return bundle.decode(params, token, state, constrain, mesh)
+
+    if mesh is None:
+        return jax.jit(prefill_fn), jax.jit(decode_fn), None, None
+
+    param_shapes, logical = abstract_init(bundle)
+    param_sh = shlib.tree_shardings(logical, param_shapes, rules, mesh)
+    state_shapes = jax.eval_shape(
+        lambda: bundle.init_state(batch, max_len, quantized=quantized_cache))
+    state_sh = shlib.tree_shardings(
+        shlib.state_logical(state_shapes), state_shapes, rules, mesh)
+    tok_sh = NamedSharding(
+        mesh, shlib.resolve(("batch", None), (batch, 1), rules, mesh))
+    prefill_jit = jax.jit(prefill_fn, in_shardings=(param_sh, None))
+    decode_jit = jax.jit(
+        decode_fn,
+        in_shardings=(param_sh, tok_sh, state_sh),
+        out_shardings=(None, state_sh),
+        donate_argnums=(2,),
+    )
+    return prefill_jit, decode_jit, state_sh, param_sh

@@ -1,0 +1,122 @@
+"""Bit-exactness and accuracy tests for the gemmlowp fixed-point core."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fixedpoint as fp
+
+I32 = st.integers(-(2**31), 2**31 - 1)
+
+
+def srdhm_oracle(a: int, b: int) -> int:
+    if a == -(2**31) and b == -(2**31):
+        return 2**31 - 1
+    ab = a * b
+    nudge = (1 << 30) if ab >= 0 else (1 - (1 << 30))
+    x = ab + nudge
+    q = abs(x) >> 31
+    return q if x >= 0 else -q
+
+
+@settings(max_examples=300, deadline=None)
+@given(I32, I32)
+def test_srdhm_bit_exact(a, b):
+    got = int(fp.saturating_rounding_doubling_high_mul(
+        jnp.int32(a), jnp.int32(b)))
+    assert got == srdhm_oracle(a, b)
+
+
+def test_srdhm_vectorized_exact():
+    rng = np.random.default_rng(0)
+    a = rng.integers(-2**31, 2**31, 5000).astype(np.int32)
+    b = rng.integers(-2**31, 2**31, 5000).astype(np.int32)
+    got = np.asarray(fp.saturating_rounding_doubling_high_mul(
+        jnp.array(a), jnp.array(b)), np.int64)
+    ref = np.array([srdhm_oracle(int(x), int(y)) for x, y in zip(a, b)])
+    np.testing.assert_array_equal(got, ref)
+
+
+@settings(max_examples=200, deadline=None)
+@given(I32, st.integers(1, 30))
+def test_rounding_divide_by_pot(x, e):
+    mask = (1 << e) - 1
+    rem = x & mask
+    thr = (mask >> 1) + (1 if x < 0 else 0)
+    ref = (x >> e) + (1 if rem > thr else 0)
+    assert int(fp.rounding_divide_by_pot(jnp.int32(x), e)) == ref
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_u64_mul(a, b):
+    hi, lo = fp.u64_from_mul_u32(jnp.uint32(a), jnp.uint32(b))
+    assert (int(hi) << 32) | int(lo) == a * b
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**63 - 1), st.integers(0, 2**62))
+def test_u64_add_sub(a, b):
+    ah, al = jnp.uint32(a >> 32), jnp.uint32(a & 0xFFFFFFFF)
+    bh, bl = jnp.uint32(b >> 32), jnp.uint32(b & 0xFFFFFFFF)
+    h, l = fp.u64_add(ah, al, bh, bl)
+    assert ((int(h) << 32) | int(l)) == (a + b) % 2**64
+    if a >= b:
+        h, l = fp.u64_sub(ah, al, bh, bl)
+        assert ((int(h) << 32) | int(l)) == a - b
+
+
+def test_tanh_sigmoid_q15_accuracy():
+    xs = np.arange(-32768, 32768, dtype=np.int16)
+    for m, scale in ((3, 2.0**-12), (4, 2.0**-11), (0, 2.0**-15)):
+        t = np.asarray(fp.tanh_q15(jnp.array(xs), m), np.float64) / 32768
+        ref = np.tanh(xs.astype(np.float64) * scale)
+        # paper sec 3.2.1: error bounded by ~Q0.15 resolution
+        assert np.abs(t - ref).max() < 1e-4, m
+    s = np.asarray(fp.sigmoid_q15(jnp.array(xs), 3), np.float64) / 32768
+    refs = 1 / (1 + np.exp(-xs.astype(np.float64) * 2.0**-12))
+    assert np.abs(s - refs).max() < 5e-5
+
+
+def test_exp_on_negative_values():
+    rng = np.random.default_rng(1)
+    x = -rng.integers(0, 2**31 - 1, 5000).astype(np.int32)
+    got = np.asarray(fp.exp_on_negative_values(jnp.array(x), 5), np.float64) / 2**31
+    ref = np.exp(x.astype(np.float64) / 2**26)
+    assert np.abs(got - ref).max() < 1e-6
+
+
+def test_integer_rsqrt():
+    rng = np.random.default_rng(2)
+    v = rng.integers(1, 2**62, 3000).astype(np.uint64)
+    hi = (v >> 32).astype(np.uint32)
+    lo = (v & 0xFFFFFFFF).astype(np.uint32)
+    m0, sh = fp.integer_rsqrt_multiplier(jnp.array(hi), jnp.array(lo))
+    approx = np.asarray(m0, np.float64) / 2**31 * 2.0 ** np.asarray(sh, np.float64)
+    ref = 1 / np.sqrt(v.astype(np.float64))
+    assert (np.abs(approx - ref) / ref).max() < 1e-6
+
+
+def test_integer_recip():
+    rng = np.random.default_rng(3)
+    x = rng.integers(1, 2**31 - 1, 3000).astype(np.int32)
+    m0, sh = fp.integer_recip_multiplier(jnp.array(x))
+    approx = np.asarray(m0, np.float64) / 2**31 * 2.0 ** np.asarray(sh, np.float64)
+    assert (np.abs(approx * x - 1.0)).max() < 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(1e-6, 100.0), st.integers(-(2**20), 2**20))
+def test_multiply_by_quantized_multiplier(scale, x):
+    m0, s = fp.quantize_multiplier(scale)
+    got = int(fp.multiply_by_quantized_multiplier(jnp.int32(x), m0, s))
+    assert abs(got - round(x * scale)) <= 1
+
+
+def test_saturating_ops():
+    assert int(fp.saturating_add_i32(jnp.int32(2**31 - 1), jnp.int32(100))) == 2**31 - 1
+    assert int(fp.saturating_add_i32(jnp.int32(-(2**31)), jnp.int32(-5))) == -(2**31)
+    assert int(fp.saturating_left_shift(jnp.int32(2**30), 2)) == 2**31 - 1
+    assert int(fp.saturating_left_shift(jnp.int32(-(2**30)), 2)) == -(2**31)
+    assert int(fp.saturate_i16(jnp.int32(40000))) == 32767
+    assert int(fp.saturate_i8(jnp.int32(-300))) == -128

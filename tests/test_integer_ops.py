@@ -1,0 +1,106 @@
+"""Integer LayerNorm / RMSNorm / softmax / matmul vs float + int64 oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fixedpoint as fp
+from repro.core import integer_ops as io
+from repro.core import qtypes as qt
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("n", [256, 1024, 2048, 8192])
+def test_integer_layernorm_vs_float(n):
+    rng = np.random.default_rng(n)
+    q = rng.integers(-32768, 32767, (16, n)).astype(np.int16)
+    lw = rng.uniform(0.2, 1.5, n)
+    lb = rng.uniform(-0.5, 0.5, n)
+    s_l = qt.symmetric_scale(np.abs(lw).max(), 16)
+    lq = np.round(lw / s_l).astype(np.int16)
+    bq = np.round(lb / (2**-10 * s_l)).astype(np.int32)
+    m0, sh = fp.quantize_multiplier(2**-10 * s_l / 2**-12)
+    out = np.asarray(io.integer_layernorm(
+        jnp.array(q), jnp.array(lq), jnp.array(bq), m0, sh))
+    x = q.astype(np.float64)
+    mu = x.mean(-1, keepdims=True)
+    sig = x.std(-1, keepdims=True)
+    ref_f = np.clip(((x - mu) / sig * lw + lb) / 2**-12, -32768, 32767)
+    # error bounded by the paper's s'=2**-10 normalized-value resolution
+    bound = np.abs(lq).max() * (2**-10 * s_l / 2**-12) + 2
+    assert np.abs(out - ref_f).max() <= bound
+
+
+def test_integer_layernorm_vs_int64_oracle():
+    rng = np.random.default_rng(0)
+    q = rng.integers(-32768, 32767, (32, 1024)).astype(np.int16)
+    lw = rng.integers(1000, 32767, 1024).astype(np.int16)
+    lb = rng.integers(-(2**20), 2**20, 1024).astype(np.int32)
+    m0, sh = fp.quantize_multiplier(0.37)
+    got = np.asarray(io.integer_layernorm(
+        jnp.array(q), jnp.array(lw), jnp.array(lb), m0, sh)).astype(np.int64)
+    want = ref.int_layernorm_np(q, lw, lb, m0, sh).astype(np.int64)
+    # limb/Newton path within 2 LSB of the paper-exact int64 reference
+    assert np.abs(got - want).max() <= 2
+
+
+def test_integer_layernorm_scale_invariance():
+    """Paper sec 3.2.6: any input scale cancels in the normalization."""
+    rng = np.random.default_rng(5)
+    q = rng.integers(-8000, 8000, (8, 512)).astype(np.int16)
+    lw = np.full(512, 16000, np.int16)
+    lb = np.zeros(512, np.int32)
+    m0, sh = fp.quantize_multiplier(1e-2)
+    a = np.asarray(io.integer_layernorm(jnp.array(q), jnp.array(lw), jnp.array(lb), m0, sh))
+    b = np.asarray(io.integer_layernorm(jnp.array(q * 4), jnp.array(lw), jnp.array(lb), m0, sh))
+    assert np.abs(a.astype(int) - b.astype(int)).max() <= 2
+
+
+def test_integer_rmsnorm():
+    rng = np.random.default_rng(1)
+    q = rng.integers(-32768, 32767, (16, 2048)).astype(np.int16)
+    w = rng.uniform(0.5, 1.5, 2048)
+    s_w = qt.symmetric_scale(np.abs(w).max(), 16)
+    wq = np.round(w / s_w).astype(np.int16)
+    m0, sh = fp.quantize_multiplier(2**-10 * s_w / 2**-12)
+    out = np.asarray(io.integer_rmsnorm(jnp.array(q), jnp.array(wq), m0, sh))
+    x = q.astype(np.float64)
+    rms = np.sqrt((x**2).mean(-1, keepdims=True))
+    ref_f = np.clip(x / rms * w / 2**-12, -32768, 32767)
+    bound = np.abs(wq).max() * (2**-10 * s_w / 2**-12) + 2
+    assert np.abs(out - ref_f).max() <= bound
+
+
+@pytest.mark.parametrize("seq", [64, 512, 4096])
+def test_integer_softmax(seq):
+    rng = np.random.default_rng(seq)
+    s_in = 1 / 128.0
+    logits = rng.integers(-4000, 4000, (4, seq)).astype(np.int16)
+    m0, sh = fp.quantize_multiplier(s_in * 2**26)
+    p = np.asarray(io.integer_softmax(jnp.array(logits), m0, sh)).astype(np.float64) / 32768
+    x = logits.astype(np.float64) * s_in
+    e = np.exp(x - x.max(-1, keepdims=True))
+    want = e / e.sum(-1, keepdims=True)
+    assert np.abs(p - want).max() < 1e-4
+    assert np.abs(p.sum(-1) - 1.0).max() < 1e-3
+
+
+def test_zero_point_folding_exact():
+    """Deployment optimization (paper sec 6) is arithmetic-identity exact."""
+    rng = np.random.default_rng(2)
+    W = rng.integers(-127, 127, (64, 32)).astype(np.int8)
+    x = rng.integers(-128, 127, (4, 64)).astype(np.int8)
+    b = rng.integers(-1000, 1000, 32).astype(np.int32)
+    zp = -11
+    folded = np.asarray(io.fold_zero_point(jnp.array(W), zp, jnp.array(b)))
+    got = np.asarray(io.matmul_i8_i32(jnp.array(x), jnp.array(W))) + folded
+    want = (x.astype(np.int64) + zp) @ W.astype(np.int64) + b
+    np.testing.assert_array_equal(got, want)
+
+
+def test_matmul_accumulation_depth():
+    """sec 3.1.1: int8 x int8 -> int32 safe to depth 2**15."""
+    k = 2**15
+    x = np.full((1, k), 127, np.int8)
+    w = np.full((k, 1), 127, np.int8)
+    acc = np.asarray(io.matmul_i8_i32(jnp.array(x), jnp.array(w)))
+    assert acc[0, 0] == 127 * 127 * k  # < 2**31, no overflow

@@ -1,0 +1,103 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fixedpoint as fp
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 128),
+                                   (64, 64, 512), (8, 128, 256)])
+@pytest.mark.parametrize("out_dtype", [jnp.int8, jnp.int16, jnp.int32])
+def test_int8_matmul_kernel(shape, out_dtype):
+    M, K, N = shape
+    rng = np.random.default_rng(M + K + N)
+    x = rng.integers(-128, 127, (M, K)).astype(np.int8)
+    w = rng.integers(-127, 127, (K, N)).astype(np.int8)
+    fold = rng.integers(-10000, 10000, N).astype(np.int32)
+    m0v, shv = fp.quantize_multiplier(4.1e-4)
+    m0 = np.full(N, m0v, np.int32)
+    sh = np.full(N, shv, np.int32)
+    kw = dict(out_dtype=out_dtype, zp_out=0 if out_dtype == jnp.int32 else 5)
+    a = ops.int8_matmul(jnp.array(x), jnp.array(w), jnp.array(fold),
+                        jnp.array(m0), jnp.array(sh),
+                        backend="pallas_interpret",
+                        block_m=64, block_n=64, block_k=64, **kw)
+    b = ops.int8_matmul(jnp.array(x), jnp.array(w), jnp.array(fold),
+                        jnp.array(m0), jnp.array(sh), backend="xla", **kw)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_int8_matmul_int32_exact_vs_numpy():
+    rng = np.random.default_rng(7)
+    x = rng.integers(-128, 127, (64, 256)).astype(np.int8)
+    w = rng.integers(-127, 127, (256, 64)).astype(np.int8)
+    fold = rng.integers(-5000, 5000, 64).astype(np.int32)
+    z = np.zeros(64, np.int32)
+    got = ops.int8_matmul(jnp.array(x), jnp.array(w), jnp.array(fold),
+                          jnp.array(z), jnp.array(z),
+                          out_dtype=jnp.int32, backend="pallas_interpret",
+                          block_m=32, block_n=32, block_k=64)
+    np.testing.assert_array_equal(np.asarray(got, np.int64),
+                                  ref.int8_matmul_np(x, w, fold))
+
+
+@pytest.mark.parametrize("B,H", [(8, 256), (16, 1024), (4, 2048)])
+@pytest.mark.parametrize("cifg", [False, True])
+@pytest.mark.parametrize("m_c", [0, 2, 4])
+def test_quant_lstm_cell_kernel(B, H, cifg, m_c):
+    rng = np.random.default_rng(B * H + m_c)
+    g = lambda: jnp.asarray(
+        rng.integers(-32768, 32767, (B, H)).astype(np.int16))
+    i16, f16, z16, o16 = g(), g(), g(), g()
+    cq = jnp.asarray(rng.integers(-20000, 20000, (B, H)).astype(np.int16))
+    kw = dict(cell_int_bits=m_c, cifg=cifg,
+              eff_m=fp.quantize_multiplier(2.0**-30 / 0.005), zp_m=-4)
+    h1, c1 = ops.quant_lstm_cell(i16, f16, z16, o16, cq,
+                                 backend="pallas_interpret",
+                                 block_b=4, block_h=128, **kw)
+    h2, c2 = ops.quant_lstm_cell(i16, f16, z16, o16, cq, backend="xla", **kw)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@pytest.mark.parametrize("B,n", [(8, 512), (32, 2048), (16, 1024)])
+def test_int_layernorm_kernel(B, n):
+    rng = np.random.default_rng(B + n)
+    q = jnp.asarray(rng.integers(-32768, 32767, (B, n)).astype(np.int16))
+    lw = jnp.asarray(rng.integers(100, 32767, n).astype(np.int16))
+    lb = jnp.asarray(rng.integers(-100000, 100000, n).astype(np.int32))
+    m0, sh = fp.quantize_multiplier(2**-10 * 3e-5 / 2**-12)
+    a = ops.int_layernorm(q, lw, lb, out_m0=m0, out_shift=sh,
+                          backend="pallas_interpret", block_rows=4)
+    b = ops.int_layernorm(q, lw, lb, out_m0=m0, out_shift=sh, backend="xla")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_backend_dispatch():
+    ops.set_backend("xla")
+    assert ops.get_backend() == "xla"
+    with pytest.raises(AssertionError):
+        ops.set_backend("cuda")
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 64)])
+def test_flash_attention_pallas_kernel(causal, window):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.layers import attention as A
+
+    rng = jax.random.PRNGKey(0)
+    BH, S, D = 4, 256, 32
+    q = jax.random.normal(jax.random.PRNGKey(1), (BH, S, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (BH, S, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(3), (BH, S, D), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=64, block_k=64, interpret=True)
+    # oracle: the (already-validated) jnp flash path, reshaped to (B,S,H,D)
+    ref = A.full_attention(q[:, :, None].swapaxes(1, 2).reshape(BH, S, 1, D),
+                           k.reshape(BH, S, 1, D), v.reshape(BH, S, 1, D),
+                           causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref[:, :, 0]),
+                               rtol=2e-5, atol=2e-5)

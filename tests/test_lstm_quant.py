@@ -1,0 +1,114 @@
+"""Integer LSTM vs float across all 16 topology variants (paper sec 3.2)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import recipe as R
+from repro.core.calibrate import Stats, TapCollector
+from repro.models import lstm as L
+from repro.models import quant_lstm as QL
+
+B, T, D_IN, D_H, D_P = 4, 12, 32, 48, 24
+
+
+def _setup(variant, seed=0):
+    cfg = L.LSTMConfig(D_IN, D_H, D_P if variant.use_projection else 0, variant)
+    params = L.init_lstm_params(jax.random.PRNGKey(seed), cfg)
+    xs = 0.8 * jax.random.normal(jax.random.PRNGKey(1), (B, T, D_IN))
+    col = TapCollector()
+    ys_f, _ = L.lstm_layer(params, cfg, xs, collector=col)
+    stats = Stats()
+    stats.merge(jax.device_get(col.snapshot()))
+    arrays, spec = R.quantize_lstm_layer(params, cfg, stats)
+    return cfg, params, xs, ys_f, arrays, spec
+
+
+@pytest.mark.parametrize("variant", L.ALL_VARIANTS, ids=lambda v: v.name)
+def test_integer_matches_float(variant):
+    cfg, params, xs, ys_f, arrays, spec = _setup(variant)
+    xs_q = QL.quantize_input(xs, spec.s_x, spec.zp_x)
+    ys_q, _ = QL.quant_lstm_layer(arrays, spec, xs_q)
+    ys_i = QL.dequantize_output(ys_q, spec.s_h, spec.zp_h_out)
+    rel = float(jnp.abs(ys_i - ys_f).max() / (jnp.abs(ys_f).max() + 1e-9))
+    assert rel < 0.05, f"{variant.name}: rel err {rel}"
+
+
+def test_integer_only_dtypes():
+    """No float appears anywhere in the integer execution graph."""
+    variant = L.LSTMVariant(True, True, True, False)
+    cfg, params, xs, _, arrays, spec = _setup(variant)
+    xs_q = QL.quantize_input(xs, spec.s_x, spec.zp_x)
+    jaxpr = jax.make_jaxpr(
+        lambda a, x: QL.quant_lstm_layer(a, spec, x))(arrays, xs_q)
+    float_ops = [
+        eqn for eqn in jaxpr.jaxpr.eqns
+        for v in eqn.outvars
+        if hasattr(v, "aval") and v.aval.dtype in (jnp.float32, jnp.bfloat16)
+    ]
+    assert not float_ops, f"float ops leaked: {float_ops[:3]}"
+
+
+def test_long_sequence_stability():
+    """Error must not blow up over long sequences (the paper's YouTube
+    long-utterance robustness claim, sec 5)."""
+    variant = L.LSTMVariant(use_layernorm=True, use_projection=False)
+    cfg = L.LSTMConfig(16, 32, 0, variant)
+    params = L.init_lstm_params(jax.random.PRNGKey(2), cfg)
+    xs = 0.5 * jax.random.normal(jax.random.PRNGKey(3), (2, 200, 16))
+    col = TapCollector()
+    ys_f, _ = L.lstm_layer(params, cfg, xs[:, :50], collector=col)
+    stats = Stats()
+    stats.merge(jax.device_get(col.snapshot()))
+    arrays, spec = R.quantize_lstm_layer(params, cfg, stats)
+    ys_f_full, _ = L.lstm_layer(params, cfg, xs)
+    xs_q = QL.quantize_input(xs, spec.s_x, spec.zp_x)
+    ys_q, _ = QL.quant_lstm_layer(arrays, spec, xs_q)
+    ys_i = QL.dequantize_output(ys_q, spec.s_h, spec.zp_h_out)
+    err_early = float(jnp.abs(ys_i[:, :20] - ys_f_full[:, :20]).mean())
+    err_late = float(jnp.abs(ys_i[:, -20:] - ys_f_full[:, -20:]).mean())
+    assert err_late < 5 * max(err_early, 1e-3), (err_early, err_late)
+
+
+def test_cifg_coupling_integer():
+    """i = 1 - f in Q0.15 with the paper's clamping (sec 3.2.9)."""
+    f = jnp.array([0, 1, 16384, 32767], jnp.int32)
+    i = jnp.minimum(jnp.int32(32768) - f, jnp.int32(32767))
+    assert i.tolist() == [32767, 32767, 16384, 1]
+
+
+def test_hybrid_matmul_close_to_float():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    wq, scales = QL.hybrid_weights(
+        {"W": {"i": w}, "R": {}, "b": {}})
+    y = QL.hybrid_matmul(x, wq["W"]["i"], scales["W_i"])
+    ref = x @ w
+    # dynamic int8 activations: error ~ s_x * sum|w| per output element
+    assert float(jnp.abs(y - ref).max()) < 0.02 * float(jnp.abs(ref).max()) + 0.05
+
+
+def test_sparsity_pruning():
+    variant = L.LSTMVariant()
+    cfg = L.LSTMConfig(32, 32, 0, variant)
+    params = L.init_lstm_params(jax.random.PRNGKey(0), cfg)
+    sparse = L.sparsify_params(params, 0.5)
+    w = np.asarray(sparse["W"]["i"])
+    assert 0.45 <= (w == 0).mean() <= 0.55
+
+
+def test_qat_gradients_flow():
+    variant = L.LSTMVariant(use_layernorm=True)
+    cfg = L.LSTMConfig(16, 24, 0, variant)
+    params = L.init_lstm_params(jax.random.PRNGKey(0), cfg)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 16))
+
+    def loss(p):
+        ys, _ = L.lstm_layer(p, cfg, xs, qat=True)
+        return jnp.mean(jnp.square(ys))
+
+    grads = jax.grad(loss)(params)
+    gnorm = float(jnp.sqrt(sum(
+        jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(grads))))
+    assert np.isfinite(gnorm) and gnorm > 0

@@ -1,0 +1,97 @@
+"""Per-arch reduced-config smoke: one train grad + decode steps, no NaNs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES, applicable_shapes
+from repro.configs.registry import ASSIGNED, CONFIGS, SMOKE_CONFIGS
+from repro.models import model_zoo
+
+IDENT = lambda x, logical=None: x
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.family == "vlm":
+        batch["frontend_embeds"] = jax.random.normal(
+            key, (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frontend_embeds"] = jax.random.normal(
+            key, (B, 16, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(SMOKE_CONFIGS), ids=str)
+def test_arch_smoke_train_and_decode(name, monkeypatch):
+    cfg = SMOKE_CONFIGS[name]
+    if cfg.family == "encdec":
+        import repro.models.whisper as W
+        monkeypatch.setattr(W, "N_FRAMES", 16)
+    bundle = model_zoo.build(cfg)
+    key = jax.random.PRNGKey(0)
+    params, specs = bundle.init(key)
+    batch = _batch(cfg, key)
+    loss, grads = jax.value_and_grad(
+        lambda p: bundle.loss(p, batch, IDENT))(params)
+    assert np.isfinite(float(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree_util.tree_leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+    state = bundle.init_state(B, 64)
+    tok = batch["tokens"][:, :1]
+    for _ in range(3):
+        logits, state = bundle.decode(params, tok, state, IDENT)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    assert bool(jnp.isfinite(logits).all())
+    assert logits.shape == (B, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED), ids=str)
+def test_full_configs_match_assignment(name):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = CONFIGS[name]
+    table = {
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024),
+    }
+    L, d, H, KV, ff, V = table[name]
+    assert cfg.n_layers == L and cfg.d_model == d and cfg.vocab_size == V
+    assert cfg.n_heads == H and cfg.n_kv_heads == KV
+    assert (cfg.d_ff == ff or cfg.moe_d_ff == ff)
+
+
+def test_shape_cells_cover_assignment():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524288
+    # long_500k only for sub-quadratic archs
+    for name in ASSIGNED:
+        shapes = [s.name for s in applicable_shapes(CONFIGS[name])]
+        if name in ("falcon-mamba-7b", "recurrentgemma-9b"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+
+
+def test_moe_param_accounting():
+    cfg = CONFIGS["kimi-k2-1t-a32b"]
+    from repro.launch import roofline as rl
+    from repro.runtime.train_loop import abstract_init
+    bundle = model_zoo.build(cfg)
+    shapes, _ = abstract_init(bundle)
+    n = sum(int(x.size) for x in jax.tree_util.tree_leaves(shapes))
+    assert 0.9e12 < n < 1.3e12, n  # ~1T total
+    act = rl.active_params(cfg, n)
+    assert 20e9 < act < 45e9, act  # ~32B active

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on system-wide quantization invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fixedpoint as fp
+from repro.core import qtypes as qt
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2, max_size=64),
+       st.sampled_from([8, 16]))
+def test_quant_dequant_error_bound(values, bits):
+    """|x - dequant(quant(x))| <= scale/2 inside the clamp range."""
+    x = np.asarray(values, np.float32)
+    q = qt.quantize_asymmetric(x, bits)
+    back = np.asarray(q.dequantize())
+    scale = q.spec.scale
+    inside = (x >= (q.spec.qmin - q.spec.zero_point) * scale) & (
+        x <= (q.spec.qmax - q.spec.zero_point) * scale)
+    assert np.abs(back - x)[inside].max(initial=0) <= scale / 2 + 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.floats(-50, 50, allow_nan=False), min_size=2, max_size=64))
+def test_zero_point_nudging_exact_zero(values):
+    """Paper sec 3.2.4: float 0.0 must map exactly to an integer."""
+    x = np.asarray(values, np.float32)
+    q = qt.quantize_asymmetric(x, 8)
+    zero_q = round(0.0 / q.spec.scale) + q.spec.zero_point
+    assert float((zero_q - q.spec.zero_point) * q.spec.scale) == 0.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(1e-4, 1e4))
+def test_pot_scale_is_power_of_two(max_abs):
+    s = qt.pot_scale_for(max_abs, 16)
+    m = np.log2(s)
+    assert abs(m - round(m)) < 1e-9
+    assert s * 32768 >= max_abs  # POT extension covers the range
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(-(2**31), 2**31 - 1), st.integers(-(2**31), 2**31 - 1))
+def test_srdhm_symmetry_and_range(a, b):
+    r1 = int(fp.saturating_rounding_doubling_high_mul(jnp.int32(a), jnp.int32(b)))
+    r2 = int(fp.saturating_rounding_doubling_high_mul(jnp.int32(b), jnp.int32(a)))
+    assert r1 == r2  # commutative
+    assert -(2**31) <= r1 <= 2**31 - 1
+    if a >= 0 and b >= 0:
+        assert r1 >= 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(-(2**24), 2**24), st.integers(-(2**24), 2**24),
+       st.floats(1e-5, 10.0))
+def test_rescale_monotonic(x, y, scale):
+    """Requantization preserves order (no inversion artifacts)."""
+    m0, s = fp.quantize_multiplier(scale)
+    rx = int(fp.multiply_by_quantized_multiplier(jnp.int32(x), m0, s))
+    ry = int(fp.multiply_by_quantized_multiplier(jnp.int32(y), m0, s))
+    if x <= y:
+        assert rx <= ry
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 2**15))
+def test_tanh_odd_symmetry(x):
+    t1 = int(fp.tanh_q15(jnp.int16(min(x, 32767)), 3))
+    t2 = int(fp.tanh_q15(jnp.int16(-min(x, 32767)), 3))
+    assert abs(t1 + t2) <= 1  # odd function within 1 LSB
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(-(2**15), 2**15 - 1))
+def test_sigmoid_complement(x):
+    """sigmoid(x) + sigmoid(-x) == 1 within 1 LSB (paper's CIFG identity)."""
+    s1 = int(fp.sigmoid_q15(jnp.int16(x), 3))
+    s2 = int(fp.sigmoid_q15(jnp.int16(max(-x - 1, -32768) + (1 if x < 0 else 0)
+                                      if False else max(min(-x, 32767), -32768)), 3))
+    assert abs((s1 + s2) - 32768) <= 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 12))
+def test_activation_outputs_bounded(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-32768, 32767, 512).astype(np.int16))
+    t = np.asarray(fp.tanh_q15(x, 3), np.int32)
+    s = np.asarray(fp.sigmoid_q15(x, 3), np.int32)
+    # paper 3.2.1: outputs clamped to [-1, 32767/32768] / [0, 32767/32768]
+    assert t.min() >= -32768 and t.max() <= 32767
+    assert s.min() >= 0 and s.max() <= 32767

@@ -1,0 +1,123 @@
+"""Sharding rules unit tests + multi-device integration via subprocess
+(device count must be set before jax initializes, so spawn fresh workers)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.runtime import sharding as shlib
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_resolve_divisibility():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    rules = shlib.rules_for("dense_small")
+    # heads=56 not divisible by 16 -> replicated (legal input sharding)
+    spec = shlib.resolve(("embed", "heads"), (128, 56), rules, mesh)
+    assert spec == shlib.P(None, None)
+    spec = shlib.resolve(("embed", "heads"), (128, 64), rules, mesh)
+    assert spec == shlib.P(None, "model")
+
+
+def test_resolve_no_duplicate_axes():
+    mesh = _FakeMesh({"data": 4, "model": 4})
+    rules = {"a": ("model",), "b": ("model",)}
+    spec = shlib.resolve(("a", "b"), (16, 16), rules, mesh)
+    # "model" must be used at most once across dims
+    axes = [s for s in spec if s is not None]
+    assert axes.count("model") <= 1
+
+
+def test_resolve_multi_axis_dp():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    rules = shlib.rules_for("dense_fsdp")
+    spec = shlib.resolve(("batch", None), (256, 128), rules, mesh)
+    assert spec == shlib.P(("pod", "data"), None)
+    # batch=8 not divisible by 32 -> only pod*? 8 % 2 == 0 so pod applies
+    spec = shlib.resolve(("batch",), (8,), rules, mesh)
+    assert spec == shlib.P(("pod", "data")) or spec == shlib.P("pod")
+
+
+_WORKER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.configs.registry import SMOKE_CONFIGS
+    from repro.models import model_zoo
+    from repro.optim.optimizers import OptConfig
+    from repro.runtime.train_loop import make_train_step
+
+    cfg = SMOKE_CONFIGS["%(arch)s"]
+    mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+    bundle = model_zoo.build(cfg)
+    params, _ = bundle.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    art = make_train_step(
+        bundle, mesh, OptConfig(lr=1e-3, warmup_steps=1, total_steps=10),
+        batch_example=jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch))
+    params = jax.device_put(params, art.param_shardings)
+    opt = jax.device_put(art.init_opt(params), art.opt_shardings)
+    batch = jax.device_put(batch, art.batch_shardings)
+    losses = []
+    for _ in range(3):
+        params, opt, m = art.step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(l) for l in losses), losses
+    assert losses[-1] < losses[0] + 1.0
+    print("OK", losses)
+""")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "grok-1-314b", "falcon-mamba-7b"])
+def test_sharded_train_step_8dev(arch):
+    """Real 8-device (2x4 mesh) sharded training steps, incl. MoE shard_map."""
+    code = _WORKER % {"arch": arch}
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=600, cwd=".")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout
+
+
+def test_sharded_decode_8dev():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.configs.registry import SMOKE_CONFIGS
+        from repro.models import model_zoo
+        from repro.runtime.train_loop import make_serve_fns
+
+        cfg = SMOKE_CONFIGS["qwen1.5-0.5b"]
+        mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+        bundle = model_zoo.build(cfg)
+        params, _ = bundle.init(jax.random.PRNGKey(0))
+        prefill, decode, state_sh, param_sh = make_serve_fns(
+            bundle, mesh, batch=4, max_len=32)
+        params = jax.device_put(params, param_sh)
+        state = jax.device_put(bundle.init_state(4, 32), state_sh)
+        tok = jax.random.randint(jax.random.PRNGKey(1), (4, 1), 0, cfg.vocab_size)
+        for _ in range(4):
+            logits, state = decode(params, tok, state)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        assert bool(jnp.isfinite(logits).all())
+        print("OK")
+    """)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=600, cwd=".")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout

@@ -1,0 +1,121 @@
+"""End-to-end behaviour: train -> calibrate -> quantize -> integer serve.
+
+This is the paper's pipeline (sec 4-5) run on a small model: post-training
+quantization from a small calibration set must track the float model, and
+training must demonstrably learn on the synthetic task.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import SMOKE_CONFIGS
+from repro.core import recipe as R
+from repro.core.calibrate import Stats, TapCollector
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import lstm as L
+from repro.models import model_zoo
+from repro.models import quant_lstm as QL
+from repro.optim.optimizers import OptConfig
+from repro.runtime.train_loop import make_train_step
+
+IDENT = lambda x, logical=None: x
+
+
+def _train(name, steps=40, lr=3e-3, data_vocab=None):
+    cfg = SMOKE_CONFIGS[name]
+    bundle = model_zoo.build(cfg)
+    data = SyntheticLM(DataConfig(vocab_size=data_vocab or cfg.vocab_size,
+                                  seq_len=32, global_batch=8, noise=0.0))
+    art = make_train_step(bundle, None, OptConfig(
+        lr=lr, warmup_steps=5, total_steps=steps + 20))
+    params, _ = bundle.init(jax.random.PRNGKey(0))
+    opt = art.init_opt(params)
+    losses = []
+    for step, batch in data.iterate():
+        if step >= steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, m = art.step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def test_training_reduces_loss_lstm():
+    # the tiny smoke LSTM (proj width 20) needs an easier rule: vocab 16
+    losses = _train("lstm-rnnt", steps=120, lr=1e-2, data_vocab=16)
+    assert losses[-1] < 0.7 * losses[0], (losses[0], losses[-1])
+
+
+def test_training_reduces_loss_transformer():
+    losses = _train("qwen1.5-0.5b", steps=120, lr=1e-2)
+    assert losses[-1] < 0.8 * losses[0], (losses[0], losses[-1])
+
+
+def test_ptq_pipeline_end_to_end():
+    """Train float LSTM -> PTQ with a small calibration set -> the integer
+    model's task loss matches float within a small margin (paper Table 1)."""
+    variant = L.LSTMVariant(use_layernorm=True, use_projection=True)
+    cfg = L.LSTMConfig(16, 32, 16, variant)
+    params = L.init_lstm_params(jax.random.PRNGKey(0), cfg)
+
+    xs = jax.random.normal(jax.random.PRNGKey(1), (64, 10, 16))
+    target = jnp.roll(xs, 1, axis=-1) * 0.5
+
+    def loss_fn(p, x, t):
+        ys, _ = L.lstm_layer(p, cfg, x)
+        return jnp.mean(jnp.square(ys[..., :16] - t))
+
+    lr = 0.05
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    for _ in range(60):
+        l, g = grad_fn(params, xs, target)
+        params = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params, g)
+    float_loss = float(loss_fn(params, xs, target))
+
+    # PTQ on a small calibration subset (paper: 100 utterances suffice)
+    col = TapCollector()
+    L.lstm_layer(params, cfg, xs[:8], collector=col)
+    stats = Stats()
+    stats.merge(jax.device_get(col.snapshot()))
+    arrays, spec = R.quantize_lstm_layer(params, cfg, stats)
+    xs_q = QL.quantize_input(xs, spec.s_x, spec.zp_x)
+    ys_q, _ = QL.quant_lstm_layer(arrays, spec, xs_q)
+    ys_i = QL.dequantize_output(ys_q, spec.s_h, spec.zp_h_out)
+    int_loss = float(jnp.mean(jnp.square(ys_i[..., :16] - target)))
+    assert int_loss < float_loss * 1.25 + 2e-3, (float_loss, int_loss)
+
+
+def test_model_size_reduction():
+    """Paper Table 1: the integer model is ~4x smaller than float."""
+    variant = L.LSTMVariant(use_layernorm=True, use_projection=True)
+    cfg = L.LSTMConfig(64, 128, 64, variant)
+    params = L.init_lstm_params(jax.random.PRNGKey(0), cfg)
+    col = TapCollector()
+    xs = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 64))
+    L.lstm_layer(params, cfg, xs, collector=col)
+    stats = Stats()
+    stats.merge(jax.device_get(col.snapshot()))
+    arrays, spec = R.quantize_lstm_layer(params, cfg, stats)
+
+    def nbytes(tree):
+        return sum(np.asarray(x).nbytes
+                   for x in jax.tree_util.tree_leaves(tree))
+
+    assert nbytes(arrays) < 0.3 * nbytes(params)
+
+
+def test_recipe_table_dump():
+    from repro.core.recipe import recipe_table
+    variant = L.LSTMVariant(True, True, True, False)
+    cfg = L.LSTMConfig(8, 16, 8, variant)
+    params = L.init_lstm_params(jax.random.PRNGKey(0), cfg)
+    col = TapCollector()
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 8))
+    L.lstm_layer(params, cfg, xs, collector=col)
+    stats = Stats()
+    stats.merge(jax.device_get(col.snapshot()))
+    _, spec = R.quantize_lstm_layer(params, cfg, stats)
+    table = recipe_table(spec)
+    assert "c" in table and "Q" in table["c"]  # POT cell format row
+    assert all(f"gate_{g}" in table for g in ("i", "f", "z", "o"))

@@ -1,0 +1,21 @@
+# Developer entry points.  `make check` is the CI gate: it COLLECTS the whole
+# suite first (so import/collection regressions fail loudly and early), then
+# runs the `fast` marker subset with Pallas interpret=True on CPU, bounded by
+# a timeout.
+PY ?= python
+PYTEST = PYTHONPATH=src $(PY) -m pytest
+
+.PHONY: check test collect bench
+
+collect:
+	$(PYTEST) -q --collect-only >/dev/null
+
+check: collect
+	timeout 1800 env PYTHONPATH=src REPRO_KERNEL_BACKEND=xla \
+		$(PY) -m pytest -q -m fast
+
+test:
+	$(PYTEST) -q
+
+bench:
+	PYTHONPATH=src $(PY) benchmarks/speed.py

@@ -33,6 +33,42 @@ def _bench(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
+def _quantize_variant(variant, d_in, d_h, d_p, B, T, seed=0):
+    cfg = L.LSTMConfig(d_in, d_h, d_p if variant.use_projection else 0,
+                       variant)
+    params = L.init_lstm_params(jax.random.PRNGKey(seed), cfg)
+    xs = 0.8 * jax.random.normal(jax.random.PRNGKey(seed + 1), (B, T, d_in))
+    col = TapCollector()
+    L.lstm_layer(params, cfg, xs, collector=col)
+    stats = Stats()
+    stats.merge(jax.device_get(col.snapshot()))
+    arrays, spec = R.quantize_lstm_layer(params, cfg, stats)
+    return QL.quantize_input(xs, spec.s_x, spec.zp_x), arrays, spec
+
+
+def fused_parity_table(B=4, T=8, d_in=16, d_h=24, d_p=12, iters=5):
+    """xla-vs-pallas(interpret) fused step latency + bit-exactness, all 16
+    topology variants (acceptance gate for the packed [i|f|z|o] executor)."""
+    print("speed/fused_table,variant,xla_us,pallas_interpret_us,bitexact")
+    all_exact = True
+    for variant in L.ALL_VARIANTS:
+        xs_q, arrays, spec = _quantize_variant(variant, d_in, d_h, d_p, B, T)
+        run_x = jax.jit(lambda a, x: QL.quant_lstm_layer(
+            a, spec, x, backend="xla")[0])
+        run_p = jax.jit(lambda a, x: QL.quant_lstm_layer(
+            a, spec, x, backend="interpret")[0])
+        x_us = _bench(run_x, arrays, xs_q, iters=iters) / T
+        p_us = _bench(run_p, arrays, xs_q, iters=iters) / T
+        exact = bool(jnp.array_equal(run_x(arrays, xs_q),
+                                     run_p(arrays, xs_q)))
+        all_exact &= exact
+        print(f"speed/fused,{x_us:.1f},{variant.name};"
+              f"interpret_us={p_us:.1f};bitexact={exact}")
+    status = "OK" if all_exact else "MISMATCH"
+    print(f"speed/fused_parity,0.0,all_16_variants_bitexact={status}")
+    return all_exact
+
+
 def main():
     variant = L.LSTMVariant()
     cfg = L.LSTMConfig(D, D, 0, variant)
@@ -71,11 +107,19 @@ def main():
     h_us = _bench(hybrid, xs)
     print(f"speed/lstm_hybrid,{h_us:.1f},dynamic-range int8 weights")
 
-    # integer-only (zero point folded -- the paper's deployed form)
+    # integer-only (zero point folded -- the paper's deployed form), via the
+    # fused executor: one packed [i|f|z|o] matmul pair per step
     xs_q = QL.quantize_input(xs, spec.s_x, spec.zp_x)
     i_us = _bench(jax.jit(
         lambda a, x: QL.quant_lstm_layer(a, spec, x)[0]), arrays, xs_q)
-    print(f"speed/lstm_integer_folded,{i_us:.1f},sec-6 zp folding ON")
+    print(f"speed/lstm_integer_folded,{i_us:.1f},"
+          "sec-6 zp folding ON; packed 2-matmul step")
+
+    # same integer math through the reference per-gate executor (8 matmuls)
+    r_us = _bench(jax.jit(
+        lambda a, x: QL.quant_lstm_layer_ref(a, spec, x)[0]), arrays, xs_q)
+    print(f"speed/lstm_integer_unpacked,{r_us:.1f},"
+          f"per-gate 8-matmul step; packing_gain={r_us / i_us:.2f}x")
 
     # integer with runtime zero-point correction (folding OFF)
     @jax.jit
@@ -85,12 +129,14 @@ def main():
             gates = {}
             for g in ("i", "f", "z", "o"):
                 gs = spec.gate_spec(g)
+                sl = spec.gate_block(g)
+                W_g, R_g = a["W_cat"][:, sl], a["R_cat"][:, sl]
                 # runtime zp correction: colsum(W) * zp computed per call
-                acc_x = iops.matmul_i8_i32(x_t, a["W"][g]) - (
-                    jnp.sum(a["W"][g].astype(jnp.int32), 0) * spec.zp_x)
-                acc_h = iops.matmul_i8_i32(h, a["R"][g]) - (
-                    jnp.sum(a["R"][g].astype(jnp.int32), 0) * spec.zp_h
-                ) + a["fold_hb"][g] * 0
+                acc_x = iops.matmul_i8_i32(x_t, W_g) - (
+                    jnp.sum(W_g.astype(jnp.int32), 0) * spec.zp_x)
+                acc_h = iops.matmul_i8_i32(h, R_g) - (
+                    jnp.sum(R_g.astype(jnp.int32), 0) * spec.zp_h
+                ) + a["fold_hb_cat"][sl] * 0
                 gate = fpx.saturating_add_i32(
                     fpx.multiply_by_quantized_multiplier(acc_x, *gs.eff_x),
                     fpx.multiply_by_quantized_multiplier(acc_h, *gs.eff_h))
@@ -116,8 +162,10 @@ def main():
     u_us = _bench(unfolded, arrays, xs_q)
     print(f"speed/lstm_integer_unfolded,{u_us:.1f},sec-6 zp folding OFF")
     print(f"speed/summary,0.0,int_vs_float={f_us/i_us:.2f}x;"
-          f"folding_gain={u_us/i_us:.2f}x")
-    return {"float": f_us, "hybrid": h_us, "integer": i_us, "unfolded": u_us}
+          f"folding_gain={u_us/i_us:.2f}x;packing_gain={r_us/i_us:.2f}x")
+    fused_parity_table()
+    return {"float": f_us, "hybrid": h_us, "integer": i_us,
+            "unpacked": r_us, "unfolded": u_us}
 
 
 if __name__ == "__main__":

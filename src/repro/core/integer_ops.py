@@ -46,13 +46,18 @@ def matmul_i16_elementwise(a_q: jax.Array, b_q: jax.Array) -> jax.Array:
 
 
 def fold_zero_point(w_q_i8: jax.Array, x_zero_point: int, bias_q: Optional[jax.Array]) -> jax.Array:
-    """Deployment optimization (sec 6): fold Sum_k W[k,:] * zp into the bias.
+    """Deployment optimization (sec 6): fold the zero-point correction into
+    the bias so the runtime kernel treats both operands as symmetric.
 
-    With this, the runtime kernel treats both operands as symmetric:
-    ``W(x + zp) + b == Wx + (W zp + b) == Wx + b'``.
+    An asymmetric activation represents ``x = s * (x_q - zp)``, so the real
+    product needs ``W(x_q - zp) + b == W x_q - colsum(W) * zp + b``: the
+    correction enters with a MINUS sign.  This is the convention the runtime
+    uses -- ``core/recipe.py`` precomputes exactly ``-colsum(W) * zp (+ b)``
+    into the ``fold_x`` / ``fold_hb`` / ``fold_*_cat`` arrays, and the
+    executors add the folded vector to the raw ``x_q @ W`` accumulator.
     """
     col_sum = jnp.sum(w_q_i8.astype(jnp.int32), axis=0)
-    folded = col_sum * jnp.int32(x_zero_point)
+    folded = -col_sum * jnp.int32(x_zero_point)
     if bias_q is not None:
         folded = folded + bias_q.astype(jnp.int32)
     return folded

@@ -75,6 +75,11 @@ class QLSTMSpec:
     def gate_spec(self, g: str) -> GateSpec:
         return dict(self.gates)[g]
 
+    def gate_block(self, g: str) -> slice:
+        """Column block of gate ``g`` inside the packed [i|f|z|o] arrays."""
+        k = self.variant.gates.index(g)
+        return slice(k * self.cfg_d_hidden, (k + 1) * self.cfg_d_hidden)
+
 
 def _np(x) -> np.ndarray:
     return np.asarray(x, np.float64)
@@ -107,7 +112,10 @@ def quantize_lstm_layer(
     m_c = 15 - int(round(-np.log2(s_c)))  # integer bits of Q_{m.15-m}
     m_c = max(m_c, 0)
 
-    arrays: Dict[str, Any] = {"W": {}, "R": {}, "fold_x": {}, "fold_hb": {}}
+    arrays: Dict[str, Any] = {}
+    per_gate: Dict[str, Dict[str, np.ndarray]] = {
+        "W": {}, "R": {}, "fold_x": {}, "fold_hb": {}
+    }
     gate_specs = []
 
     for g in v.gates:
@@ -118,8 +126,8 @@ def quantize_lstm_layer(
         s_R = qt.symmetric_scale(np.abs(R).max(), 8)
         Wq = np.clip(np.round(W / s_W), -127, 127).astype(np.int8)
         Rq = np.clip(np.round(R / s_R), -127, 127).astype(np.int8)
-        arrays["W"][g] = jnp.asarray(Wq)
-        arrays["R"][g] = jnp.asarray(Rq)
+        per_gate["W"][g] = Wq
+        per_gate["R"][g] = Rq
 
         # gate output scale: Q3.12 without LN, measured/32767 with LN
         if v.use_layernorm:
@@ -128,18 +136,19 @@ def quantize_lstm_layer(
             s_gate = 2.0**-12
 
         # zero-point folding (sec 6): W(x - zp) == Wx - colsum(W)*zp
+        # (the sign convention of integer_ops.fold_zero_point)
         fold_x = -Wq.astype(np.int64).sum(axis=0) * zp_x
-        arrays["fold_x"][g] = jnp.asarray(
-            np.clip(fold_x, -(2**31 - 1), 2**31 - 1), jnp.int32
-        )
+        per_gate["fold_x"][g] = np.clip(
+            fold_x, -(2**31 - 1), 2**31 - 1
+        ).astype(np.int32)
         fold_h = -Rq.astype(np.int64).sum(axis=0) * zp_h
         if not v.use_layernorm:
             # bias carried at s_R*s_h into the recurrent accumulator (3.2.4)
             bq = np.round(b / (s_R * s_h))
             fold_h = fold_h + bq
-        arrays["fold_hb"][g] = jnp.asarray(
-            np.clip(fold_h, -(2**31 - 1), 2**31 - 1), jnp.int32
-        )
+        per_gate["fold_hb"][g] = np.clip(
+            fold_h, -(2**31 - 1), 2**31 - 1
+        ).astype(np.int32)
 
         eff_c = None
         if v.use_peephole and g != "z":
@@ -173,6 +182,26 @@ def quantize_lstm_layer(
                 ),
             )
         )
+
+    # --- packed [i|f|z|o] blocks (fused executor, fig 10-12) ---------------
+    # The gate weights are stored ONLY column-concatenated, so one
+    # (B, d_in) x (d_in, G*H) int8 MXU matmul produces every gate
+    # accumulator at once; slicing column block g (``spec.gate_block``) is
+    # bit-identical to the per-gate matmul, so the reference executor reads
+    # the same buffers and the model stays at its Table-1 size.  Gate order
+    # follows ``v.gates`` (CIFG drops the "i" block).
+    arrays["W_cat"] = jnp.asarray(
+        np.concatenate([per_gate["W"][g] for g in v.gates], axis=1)
+    )
+    arrays["R_cat"] = jnp.asarray(
+        np.concatenate([per_gate["R"][g] for g in v.gates], axis=1)
+    )
+    arrays["fold_x_cat"] = jnp.asarray(
+        np.concatenate([per_gate["fold_x"][g] for g in v.gates])
+    )
+    arrays["fold_hb_cat"] = jnp.asarray(
+        np.concatenate([per_gate["fold_hb"][g] for g in v.gates])
+    )
 
     eff_proj = None
     if v.use_projection:

@@ -5,17 +5,28 @@ Backends:
                             dry-run lowers so cost_analysis sees real FLOPs).
   * ``pallas``           -- compiled Pallas kernels (TPU runtime target).
   * ``pallas_interpret`` -- Pallas interpreter (CPU correctness validation).
+                            ``interpret`` is accepted as an alias.
 
 Select globally via ``set_backend`` or per-call with ``backend=``.
+
+Besides the per-kernel wrappers this module hosts the **fused sequence-level
+integer LSTM executor** (``quant_lstm_step`` / ``quant_lstm_seq``): each
+timestep runs ONE packed ``(B, d_in) x (d_in, G*H)`` int8 MXU matmul plus one
+recurrent ``(B, d_out) x (d_out, G*H)`` matmul over the ``[i|f|z|o]``
+column-concatenated weights from ``core/recipe.py``, then feeds the fused
+``quant_lstm_cell`` elementwise kernel -- 2 ``dot_general`` calls per step
+instead of the reference executor's 8, with bit-identical integer results.
 """
 from __future__ import annotations
 
 import os
-from typing import Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import fixedpoint as fp
+from repro.core import integer_ops as iops
 from . import ref
 from .int8_matmul import int8_matmul_pallas
 from .int_layernorm import int_layernorm_pallas
@@ -23,10 +34,12 @@ from .quant_lstm_cell import quant_lstm_cell_pallas
 
 _BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "xla")
 _VALID = ("xla", "pallas", "pallas_interpret")
+_ALIAS = {"interpret": "pallas_interpret"}
 
 
 def set_backend(name: str) -> None:
     global _BACKEND
+    name = _ALIAS.get(name, name)
     assert name in _VALID, name
     _BACKEND = name
 
@@ -37,6 +50,7 @@ def get_backend() -> str:
 
 def _resolve(backend: Optional[str]) -> str:
     b = backend or _BACKEND
+    b = _ALIAS.get(b, b)
     assert b in _VALID, b
     return b
 
@@ -72,19 +86,26 @@ def int8_matmul(
 
 
 def quant_lstm_cell(
-    i16, f16, z16, o16, c_q, *, cell_int_bits, cifg, eff_m, zp_m,
+    i16, f16, z16, o_in, c_q, *, cell_int_bits, cifg, eff_m, zp_m,
+    p_o=None, eff_c_o=None, lw_o=None, lb_o=None, ln_out_o=None,
     backend: Optional[str] = None, **block_kw
 ) -> Tuple[jax.Array, jax.Array]:
+    """Fused elementwise cell update.  With a peephole layer, ``o_in`` is the
+    int32 pre-peephole o-gate accumulator and the gate is finished against
+    ``c_new`` inside the fusion (see ``kernels/quant_lstm_cell.py``)."""
     b = _resolve(backend)
+    okw = dict(p_o=p_o, eff_c_o=eff_c_o, lw_o=lw_o, lb_o=lb_o,
+               ln_out_o=ln_out_o)
     if b == "xla":
         return ref.quant_lstm_cell_jnp(
-            i16, f16, z16, o16, c_q,
+            i16, f16, z16, o_in, c_q,
             cell_int_bits=cell_int_bits, cifg=cifg, eff_m=eff_m, zp_m=zp_m,
+            **okw,
         )
     return quant_lstm_cell_pallas(
-        i16, f16, z16, o16, c_q,
+        i16, f16, z16, o_in, c_q,
         cell_int_bits=cell_int_bits, cifg=cifg, eff_m=eff_m, zp_m=zp_m,
-        interpret=(b == "pallas_interpret"), **block_kw,
+        interpret=(b == "pallas_interpret"), **okw, **block_kw,
     )
 
 
@@ -99,3 +120,109 @@ def int_layernorm(
         q, ln_w_q, ln_b_q, out_m0=out_m0, out_shift=out_shift,
         interpret=(b == "pallas_interpret"), **block_kw,
     )
+
+
+# ---------------------------------------------------------------------------
+# Fused sequence-level integer LSTM executor (packed [i|f|z|o] matmuls)
+# ---------------------------------------------------------------------------
+
+
+def quant_lstm_step(
+    arrays: Dict[str, Any],
+    spec,  # core.recipe.QLSTMSpec (static)
+    x_q: jax.Array,  # int8 (B, d_in)
+    h_q: jax.Array,  # int8 (B, d_out)
+    c_q: jax.Array,  # int16 (B, H)
+    *,
+    backend: Optional[str] = None,
+    **block_kw,
+) -> Tuple[jax.Array, jax.Array]:
+    """One fused integer LSTM timestep: 2 packed matmuls + fused cell.
+
+    Bit-exact with the reference per-gate executor in
+    ``repro.models.quant_lstm`` (slicing column block g of the packed int32
+    product is the per-gate matmul; every rescale runs in the same order).
+    Returns (h_new int8, c_new int16).
+    """
+    b = _resolve(backend)
+    gates = spec.variant.gates  # [i|f|z|o] order; CIFG drops "i"
+    H = spec.cfg_d_hidden
+    acc_x = iops.matmul_i8_i32(x_q, arrays["W_cat"]) + arrays["fold_x_cat"]
+    acc_h = iops.matmul_i8_i32(h_q, arrays["R_cat"]) + arrays["fold_hb_cat"]
+
+    g16: Dict[str, jax.Array] = {}
+    o_kw: Dict[str, Any] = {}
+    o_in = None
+    for k, g in enumerate(gates):
+        gs = spec.gate_spec(g)
+        gate = fp.saturating_add_i32(
+            fp.multiply_by_quantized_multiplier(
+                acc_x[..., k * H:(k + 1) * H], *gs.eff_x
+            ),
+            fp.multiply_by_quantized_multiplier(
+                acc_h[..., k * H:(k + 1) * H], *gs.eff_h
+            ),
+        )
+        if g == "o" and spec.use_peephole:
+            # eq 5: the o peephole reads c_new, which only exists inside the
+            # fused cell -- hand over the int32 accumulator (+ LN params).
+            o_in = gate
+            o_kw = dict(p_o=arrays["P"]["o"], eff_c_o=gs.eff_c)
+            if spec.use_layernorm:
+                o_kw.update(
+                    lw_o=arrays["L"]["o"], lb_o=arrays["Lb"]["o"],
+                    ln_out_o=gs.ln_out,
+                )
+            continue
+        if gs.eff_c is not None:  # i/f peephole on the previous cell state
+            acc_c = iops.matmul_i16_elementwise(arrays["P"][g], c_q)
+            gate = fp.saturating_add_i32(
+                gate, fp.multiply_by_quantized_multiplier(acc_c, *gs.eff_c)
+            )
+        gate16 = fp.saturate_i16(gate)
+        if spec.use_layernorm:
+            gate16 = iops.integer_layernorm(
+                gate16, arrays["L"][g], arrays["Lb"][g],
+                gs.ln_out[0], gs.ln_out[1],
+            )
+        g16[g] = gate16
+    if o_in is None:
+        o_in = g16["o"]
+    i16 = g16.get("i", g16["f"])  # placeholder when CIFG (kernel ignores it)
+
+    m_q, c_new = quant_lstm_cell(
+        i16, g16["f"], g16["z"], o_in, c_q,
+        cell_int_bits=spec.cell_int_bits, cifg=spec.use_cifg,
+        eff_m=spec.eff_m, zp_m=spec.zp_m, backend=b, **o_kw, **block_kw,
+    )
+    if spec.use_projection:
+        acc = iops.matmul_i8_i32(m_q, arrays["W_proj"]) + arrays["fold_proj"]
+        h_new = fp.multiply_by_quantized_multiplier(acc, *spec.eff_proj)
+        h_new = fp.saturate_i8(h_new + jnp.int32(spec.zp_h_out))
+    else:
+        h_new = m_q
+    return h_new, c_new
+
+
+def quant_lstm_seq(
+    arrays: Dict[str, Any],
+    spec,
+    xs_q: jax.Array,  # int8 (B, T, d_in)
+    h0_q: jax.Array,
+    c0_q: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    **block_kw,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Scan ``quant_lstm_step`` over time: int8 (B, T, d_in) -> (B, T, d_out)."""
+    b = _resolve(backend)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = quant_lstm_step(
+            arrays, spec, x_t, h, c, backend=b, **block_kw
+        )
+        return (h, c), h
+
+    (h, c), ys = jax.lax.scan(step, (h0_q, c0_q), jnp.swapaxes(xs_q, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), (h, c)

@@ -12,6 +12,23 @@ recurrent step is memory-bound, so fusing is a direct paper-motivated win.
 
 Inputs are the already-rescaled int16 Q3.12 gate pre-activations (the matmuls
 live in ``int8_matmul.py``); CIFG simply omits the ``i`` input (static flag).
+
+o-gate contract (peephole variants)
+-----------------------------------
+The output-gate peephole reads the NEW cell state (eq 5: ``o = sigma(... +
+P_o (.) c_t)``), and ``c_t`` only exists inside this fusion.  Callers
+therefore must NOT pre-activate the o gate when the layer has peepholes;
+instead they pass the int32 pre-peephole accumulator (``mbqm(acc_x, eff_x)
+sat+ mbqm(acc_h, eff_h)``) via ``o_in`` together with ``p_o``/``eff_c_o``
+(and, for LayerNorm layers, ``lw_o``/``lb_o``/``ln_out_o``), and the kernel
+finishes the gate after computing ``c_new``:
+
+    o32  = sat_add(o_in, mbqm(P_o (.) c_new, eff_c_o))
+    o16  = sat16(o32)               -> integer LayerNorm (optional)
+    o_act = sigmoid_q15(o16)
+
+When LayerNorm runs in-kernel the block must span the full hidden axis
+(LN reduces over H); ``quant_lstm_cell_pallas`` enforces this.
 """
 from __future__ import annotations
 
@@ -23,22 +40,61 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import fixedpoint as fp
+from repro.core import integer_ops as iops
+
+
+def largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= cap (so any (B, H) tiles cleanly)."""
+    d = max(min(cap, n), 1)
+    while n % d:
+        d -= 1
+    return d
+
+
+def finish_o_gate(
+    o_in: jax.Array,
+    c_new: jax.Array,
+    p_o: Optional[jax.Array],
+    eff_c_o: Optional[Tuple[int, int]],
+    lw_o: Optional[jax.Array],
+    lb_o: Optional[jax.Array],
+    ln_out_o: Optional[Tuple[int, int]],
+) -> jax.Array:
+    """Shared o-gate finisher (see module docstring).  Returns int16 Q3.12.
+
+    Without a peephole ``o_in`` is already the final int16 pre-activation
+    (LayerNorm, if any, ran outside) and passes through untouched.
+    """
+    if eff_c_o is None:
+        assert ln_out_o is None, "in-fusion o-gate LN requires the peephole"
+        return o_in
+    acc_c = p_o.astype(jnp.int32) * c_new.astype(jnp.int32)
+    o32 = fp.saturating_add_i32(
+        o_in, fp.multiply_by_quantized_multiplier(acc_c, *eff_c_o)
+    )
+    o16 = fp.saturate_i16(o32)
+    if ln_out_o is not None:
+        o16 = iops.integer_layernorm(o16, lw_o, lb_o, ln_out_o[0], ln_out_o[1])
+    return o16
 
 
 def _cell_kernel(
-    i_ref,
-    f_ref,
-    z_ref,
-    o_ref,
-    c_ref,
-    h_out_ref,
-    c_out_ref,
-    *,
+    *refs,
     cell_int_bits: int,
     cifg: bool,
     eff_m: Tuple[int, int],
     zp_m: int,
+    eff_c_o: Optional[Tuple[int, int]],
+    ln_o: bool,
+    ln_out_o: Optional[Tuple[int, int]],
 ):
+    it = iter(refs)
+    i_ref, f_ref, z_ref, o_ref, c_ref = (next(it) for _ in range(5))
+    p_ref = next(it) if eff_c_o is not None else None
+    lw_ref = next(it) if ln_o else None
+    lb_ref = next(it) if ln_o else None
+    h_out_ref, c_out_ref = next(it), next(it)
+
     n_c = 15 - cell_int_bits
     f_act = fp.sigmoid_q15(f_ref[...], 3).astype(jnp.int32)
     z_act = fp.tanh_q15(z_ref[...], 3).astype(jnp.int32)
@@ -53,7 +109,16 @@ def _cell_kernel(
         fp.rounding_divide_by_pot(fc, 15),
     )
     c_new = fp.saturate_i16(c_new32)
-    o_act = fp.sigmoid_q15(o_ref[...], 3).astype(jnp.int32)
+    o16 = finish_o_gate(
+        o_ref[...],
+        c_new,
+        p_ref[...] if p_ref is not None else None,
+        eff_c_o,
+        lw_ref[...] if lw_ref is not None else None,
+        lb_ref[...] if lb_ref is not None else None,
+        ln_out_o,
+    )
+    o_act = fp.sigmoid_q15(o16, 3).astype(jnp.int32)
     g_c = fp.tanh_q15(c_new, cell_int_bits).astype(jnp.int32)
     m_raw = o_act * g_c  # Q0.30
     m_q = fp.multiply_by_quantized_multiplier(m_raw, eff_m[0], eff_m[1])
@@ -68,6 +133,8 @@ def _cell_kernel(
         "cifg",
         "eff_m",
         "zp_m",
+        "eff_c_o",
+        "ln_out_o",
         "block_b",
         "block_h",
         "interpret",
@@ -77,38 +144,67 @@ def quant_lstm_cell_pallas(
     i16: jax.Array,  # (B, H) int16 Q3.12 (ignored when cifg)
     f16: jax.Array,
     z16: jax.Array,
-    o16: jax.Array,
+    o_in: jax.Array,  # (B, H) int16 gate, OR int32 accumulator (peephole)
     c_q: jax.Array,  # (B, H) int16 Q_{m.15-m}
     *,
     cell_int_bits: int,
     cifg: bool,
     eff_m: Tuple[int, int],
     zp_m: int,
+    p_o: Optional[jax.Array] = None,  # (H,) int16 peephole weights
+    eff_c_o: Optional[Tuple[int, int]] = None,
+    lw_o: Optional[jax.Array] = None,  # (H,) int16 LN weight (o gate)
+    lb_o: Optional[jax.Array] = None,  # (H,) int32 LN bias (o gate)
+    ln_out_o: Optional[Tuple[int, int]] = None,
     block_b: int = 8,
     block_h: int = 512,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (m int8, c_new int16).  Elementwise: tiles freely over (B, H)."""
+    """Returns (m int8, c_new int16).  Elementwise: tiles freely over (B, H),
+    except in-kernel o-gate LayerNorm which pins the block to the full H axis.
+
+    See the module docstring for the o-gate peephole/LayerNorm contract.
+    """
     B, H = f16.shape
-    bb, bh = min(block_b, B), min(block_h, H)
-    assert B % bb == 0 and H % bh == 0, (B, H, bb, bh)
+    if eff_c_o is not None:
+        assert p_o is not None and o_in.dtype == jnp.int32, (
+            "o-gate peephole fusion takes the int32 pre-peephole accumulator"
+        )
+    else:
+        assert ln_out_o is None, "in-fusion o-gate LN requires the peephole"
+    bb = largest_divisor(B, block_b)
+    # LN reduces over the full hidden axis: the H tile must cover it.
+    bh = H if ln_out_o is not None else largest_divisor(H, block_h)
     grid = (B // bb, H // bh)
     spec = pl.BlockSpec((bb, bh), lambda i, j: (i, j))
+    vec_spec = pl.BlockSpec((bh,), lambda i, j: (j,))
+    inputs = [i16, f16, z16, o_in, c_q]
+    in_specs = [spec] * 5
+    ln_o = ln_out_o is not None
+    if eff_c_o is not None:
+        inputs.append(p_o)
+        in_specs.append(vec_spec)
+    if ln_o:
+        inputs += [lw_o, lb_o]
+        in_specs += [vec_spec, vec_spec]
     kernel = functools.partial(
         _cell_kernel,
         cell_int_bits=cell_int_bits,
         cifg=cifg,
         eff_m=eff_m,
         zp_m=zp_m,
+        eff_c_o=eff_c_o,
+        ln_o=ln_o,
+        ln_out_o=ln_out_o,
     )
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[spec] * 5,
+        in_specs=in_specs,
         out_specs=[spec, spec],
         out_shape=[
             jax.ShapeDtypeStruct((B, H), jnp.int8),
             jax.ShapeDtypeStruct((B, H), jnp.int16),
         ],
         interpret=interpret,
-    )(i16, f16, z16, o16, c_q)
+    )(*inputs)

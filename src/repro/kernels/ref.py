@@ -41,8 +41,14 @@ def int8_matmul_np(x_q, w_q, fold):
 
 
 def quant_lstm_cell_jnp(
-    i16, f16, z16, o16, c_q, *, cell_int_bits, cifg, eff_m, zp_m
+    i16, f16, z16, o_in, c_q, *, cell_int_bits, cifg, eff_m, zp_m,
+    p_o=None, eff_c_o=None, lw_o=None, lb_o=None, ln_out_o=None
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """XLA twin of ``quant_lstm_cell_pallas`` (same o-gate contract: with a
+    peephole, ``o_in`` is the int32 pre-peephole accumulator finished against
+    ``c_new`` inside this fusion)."""
+    from repro.kernels.quant_lstm_cell import finish_o_gate
+
     n_c = 15 - cell_int_bits
     f_act = fp.sigmoid_q15(f16, 3).astype(jnp.int32)
     z_act = fp.tanh_q15(z16, 3).astype(jnp.int32)
@@ -56,6 +62,7 @@ def quant_lstm_cell_jnp(
             fp.rounding_divide_by_pot(f_act * c_q.astype(jnp.int32), 15),
         )
     )
+    o16 = finish_o_gate(o_in, c_new, p_o, eff_c_o, lw_o, lb_o, ln_out_o)
     o_act = fp.sigmoid_q15(o16, 3).astype(jnp.int32)
     g_c = fp.tanh_q15(c_new, cell_int_bits).astype(jnp.int32)
     m_q = fp.saturate_i8(

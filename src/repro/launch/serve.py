@@ -1,7 +1,11 @@
-"""Serving launcher: batched prefill + decode with optional int8 quantization.
+"""Serving launcher: batched prefill + decode with optional quantization.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
         --batch 4 --prompt-len 32 --gen 16 [--quant int8]
+
+    # the paper's integer-only LSTM path (fused [i|f|z|o] executor):
+    PYTHONPATH=src python -m repro.launch.serve --arch lstm-rnnt --smoke \
+        --quant int8-lstm --backend interpret
 """
 from __future__ import annotations
 
@@ -12,6 +16,79 @@ import jax
 import jax.numpy as jnp
 
 
+def _scan_prefill(decode, params, prompt, state):
+    """Teacher-force the whole prompt through decode in ONE scanned pass.
+
+    Replaces the former per-token python loop (one dispatch per prompt
+    position) with a single jitted ``lax.scan``; returns the last-position
+    logits and the warmed decode state.
+    """
+
+    # first token primes the (B, V) logits carry; the scan then keeps only
+    # the latest logits live instead of stacking a (T, B, V) array
+    logits, state = decode(params, prompt[:, :1], state)
+
+    def body(carry, tok):
+        state, _ = carry
+        logits, state = decode(params, tok[:, None], state)
+        return (state, logits), None
+
+    (state, logits), _ = jax.lax.scan(
+        body, (state, logits), jnp.swapaxes(prompt[:, 1:], 0, 1))
+    return logits, state
+
+
+def _greedy_loop(decode, params, logits, state, n_gen):
+    out_tokens = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for _ in range(n_gen):
+        logits, state = decode(params, tok, state)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    return jnp.concatenate(out_tokens, axis=1)
+
+
+def _serve_int8_lstm(args, cfg) -> None:
+    """Integer-only serving of the stacked LSTM LM (paper sec 3.2 path)."""
+    from repro.models import lstm_lm, model_zoo
+
+    if cfg.family != "lstm":
+        raise SystemExit(
+            f"--quant int8-lstm requires an lstm arch (e.g. lstm-rnnt), "
+            f"got {cfg.name} ({cfg.family})")
+    bundle = model_zoo.build(cfg)
+    params, _ = bundle.init(jax.random.PRNGKey(0))
+    calib = jax.random.randint(
+        jax.random.PRNGKey(2), (args.batch, max(args.prompt_len, 8)), 0,
+        cfg.vocab_size)
+    t0 = time.time()
+    qlayers = lstm_lm.quantize_stack(params, cfg, calib)
+    print(f"calibrated+quantized {len(qlayers)} LSTM layers "
+          f"in {time.time() - t0:.1f}s (backend={args.backend})")
+
+    prompt = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size)
+    prefill = jax.jit(lambda p, toks, s: lstm_lm.quant_prefill(
+        p, qlayers, cfg, toks, s, backend=args.backend))
+    decode = jax.jit(lambda p, t, s: lstm_lm.quant_decode_step(
+        p, qlayers, cfg, t, s, backend=args.backend))
+
+    state = lstm_lm.init_quant_decode_state(qlayers, args.batch)
+    t0 = time.time()
+    logits, state = prefill(params, prompt, state)
+    jax.block_until_ready(logits)
+    prefill_s = time.time() - t0
+    t0 = time.time()
+    gen = _greedy_loop(decode, params, logits, state, args.gen)
+    gen_s = time.time() - t0
+    print(f"arch={cfg.name} quant=int8-lstm backend={args.backend}")
+    print(f"prompt tokens/s: {args.batch * args.prompt_len / prefill_s:.1f}")
+    print(f"decode tokens/s: {args.batch * args.gen / gen_s:.1f}")
+    print("sample:", gen[0].tolist())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -20,13 +97,24 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--quant", default="none", choices=["none", "int8"])
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "int8", "int8-lstm"])
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "interpret"],
+                    help="integer LSTM kernel backend (int8-lstm only)")
     args = ap.parse_args()
+    if args.prompt_len < 1:
+        # decode needs at least one teacher-forced token to produce logits
+        ap.error("--prompt-len must be >= 1")
 
     from repro.configs.registry import get_config
     from repro.models import model_zoo, quant_transformer
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.quant == "int8-lstm":
+        _serve_int8_lstm(args, cfg)
+        return
+
     bundle = model_zoo.build(cfg)
     params, _ = bundle.init(jax.random.PRNGKey(0))
     if args.quant == "int8":
@@ -35,27 +123,19 @@ def main() -> None:
 
     constrain = lambda x, logical=None: x
     prompt = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size)
 
     decode = jax.jit(lambda p, t, s: bundle.decode(p, t, s, constrain))
     state = bundle.init_state(args.batch, args.max_len)
     # prefill by teacher-forcing the prompt through decode (cache warmup)
-    tok = prompt[:, :1]
     t0 = time.time()
-    for i in range(args.prompt_len):
-        logits, state = decode(params, prompt[:, i:i + 1], state)
+    logits, state = _scan_prefill(decode, params, prompt, state)
     jax.block_until_ready(logits)
     prefill_s = time.time() - t0
-    out_tokens = []
     t0 = time.time()
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    for _ in range(args.gen):
-        logits, state = decode(params, tok, state)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
+    gen = _greedy_loop(decode, params, logits, state, args.gen)
     gen_s = time.time() - t0
-    gen = jnp.concatenate(out_tokens, axis=1)
     print(f"arch={cfg.name} quant={args.quant}")
     print(f"prompt tokens/s: {args.batch * args.prompt_len / prefill_s:.1f}")
     print(f"decode tokens/s: {args.batch * args.gen / gen_s:.1f}")

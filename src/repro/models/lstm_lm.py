@@ -112,3 +112,85 @@ def decode_step(params, cfg, token, states, constrain, mesh=None):
     logits, new_states = forward(params, cfg, token, constrain, mesh,
                                  states=states)
     return logits[:, -1], new_states
+
+
+# ---------------------------------------------------------------------------
+# Integer-only serving (paper Table 1 "integer" rows): the LSTM stack runs
+# through core.recipe + the fused executor; embedding and LM head stay float
+# at the quantize/dequantize boundary.
+# ---------------------------------------------------------------------------
+
+
+def quantize_stack(params, cfg: ArchConfig, calib_tokens):
+    """Calibrate on ``calib_tokens`` and apply the Table-2 recipe per layer.
+
+    Returns a list of ``(arrays, spec)`` pairs (one per LSTM layer) for
+    ``quant_forward``.
+    """
+    from repro.core import recipe as R
+    from repro.core.calibrate import Stats, TapCollector
+
+    col = TapCollector()
+    forward(params, cfg, calib_tokens, lambda x, logical=None: x,
+            collector=col)
+    stats = Stats()
+    stats.merge(jax.device_get(col.snapshot()))
+    return [
+        R.quantize_lstm_layer(p, lc, stats, prefix=f"l{i}/")
+        for i, (p, lc) in enumerate(zip(params["lstm"], layer_cfgs(cfg)))
+    ]
+
+
+def init_quant_decode_state(qlayers, batch: int):
+    """Integer decode state: int8 hidden (at its zero point) + int16 cell."""
+    from repro.models.quant_lstm import _initial_state
+
+    h, c = [], []
+    for _, spec in qlayers:
+        h0, c0 = _initial_state(spec, batch, None, None)
+        h.append(h0)
+        c.append(c0)
+    return {"h": h, "c": c, "len": jnp.zeros((), jnp.int32)}
+
+
+def quant_forward(params, qlayers, cfg: ArchConfig, tokens, states,
+                  backend: str = "xla"):
+    """Integer LSTM stack over ``tokens``: (B, T) -> logits (B, T, V).
+
+    Each layer quantizes its float input with its own calibrated (s_x, zp_x),
+    runs the fused integer executor (``backend`` = xla | pallas | interpret),
+    and dequantizes for the next layer / the LM head.
+    """
+    from repro.models import quant_lstm as QL
+
+    x = emb.embed_tokens(params, tokens).astype(jnp.float32)
+    new_h, new_c = [], []
+    for i, (arrays, spec) in enumerate(qlayers):
+        x_q = QL.quantize_input(x, spec.s_x, spec.zp_x)
+        ys_q, (h, c) = QL.quant_lstm_layer(
+            arrays, spec, x_q, states["h"][i], states["c"][i],
+            backend=backend)
+        x = QL.dequantize_output(ys_q, spec.s_h, spec.zp_h_out)
+        new_h.append(h)
+        new_c.append(c)
+    logits = emb.logits_head(params, x.astype(jnp.bfloat16))
+    return logits, {
+        "h": new_h,
+        "c": new_c,
+        "len": states["len"] + tokens.shape[1],
+    }
+
+
+def quant_prefill(params, qlayers, cfg: ArchConfig, tokens, states,
+                  backend: str = "xla"):
+    """Teacher-forced integer prefill in ONE scanned pass over the prompt."""
+    logits, states = quant_forward(params, qlayers, cfg, tokens, states,
+                                   backend=backend)
+    return logits[:, -1], states
+
+
+def quant_decode_step(params, qlayers, cfg: ArchConfig, token, states,
+                      backend: str = "xla"):
+    logits, states = quant_forward(params, qlayers, cfg, token, states,
+                                   backend=backend)
+    return logits[:, -1], states

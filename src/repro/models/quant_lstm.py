@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core import fixedpoint as fp
 from repro.core import integer_ops as iops
 from repro.core.recipe import QLSTMSpec
+from repro.kernels import ops as kops
 
 
 def quantize_input(x: jax.Array, scale: float, zero_point: int) -> jax.Array:
@@ -38,10 +39,15 @@ def _gate_accumulators(
     h_q: jax.Array,
     c_q: Optional[jax.Array],
 ) -> jax.Array:
-    """Integer gate pre-activation -> int16 (fig 3 / fig 6 execution)."""
+    """Integer gate pre-activation -> int16 (fig 3 / fig 6 execution).
+
+    Reads gate g's column block of the packed [i|f|z|o] weights -- the same
+    buffers the fused executor consumes whole.
+    """
     gs = spec.gate_spec(g)
-    acc_x = iops.matmul_i8_i32(x_q, arrays["W"][g]) + arrays["fold_x"][g]
-    acc_h = iops.matmul_i8_i32(h_q, arrays["R"][g]) + arrays["fold_hb"][g]
+    sl = spec.gate_block(g)
+    acc_x = iops.matmul_i8_i32(x_q, arrays["W_cat"][:, sl]) + arrays["fold_x_cat"][sl]
+    acc_h = iops.matmul_i8_i32(h_q, arrays["R_cat"][:, sl]) + arrays["fold_hb_cat"][sl]
     gate = fp.multiply_by_quantized_multiplier(acc_x, *gs.eff_x)
     gate = fp.saturating_add_i32(
         gate, fp.multiply_by_quantized_multiplier(acc_h, *gs.eff_h)
@@ -131,20 +137,58 @@ def quant_lstm_cell(
     return h_new, c_new
 
 
+def _initial_state(
+    spec: QLSTMSpec,
+    B: int,
+    h0_q: Optional[jax.Array],
+    c0_q: Optional[jax.Array],
+) -> Tuple[jax.Array, jax.Array]:
+    d_out = spec.cfg_d_proj if spec.use_projection else spec.cfg_d_hidden
+    if h0_q is None:
+        h0_q = jnp.full((B, d_out), spec.zp_h_out, jnp.int8)
+    if c0_q is None:
+        c0_q = jnp.zeros((B, spec.cfg_d_hidden), jnp.int16)
+    return h0_q, c0_q
+
+
 def quant_lstm_layer(
     arrays: Dict[str, Any],
     spec: QLSTMSpec,
     xs_q: jax.Array,
     h0_q: Optional[jax.Array] = None,
     c0_q: Optional[jax.Array] = None,
+    *,
+    backend: Optional[str] = None,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """Integer layer over time.  xs_q: int8 (B, T, d_in) -> int8 (B, T, d_out)."""
-    B = xs_q.shape[0]
-    d_out = spec.cfg_d_proj if spec.use_projection else spec.cfg_d_hidden
-    if h0_q is None:
-        h0_q = jnp.full((B, d_out), spec.zp_h_out, jnp.int8)
-    if c0_q is None:
-        c0_q = jnp.zeros((B, spec.cfg_d_hidden), jnp.int16)
+    """Integer layer over time.  xs_q: int8 (B, T, d_in) -> int8 (B, T, d_out).
+
+    Dispatches through the fused sequence executor in ``repro.kernels.ops``:
+    each timestep runs one packed ``[i|f|z|o]`` input matmul plus one packed
+    recurrent matmul feeding the fused cell update.  ``backend`` selects how
+    the elementwise cell fusion lowers -- ``"xla"`` (default), ``"pallas"``
+    (TPU), or ``"interpret"`` (Pallas interpreter on CPU); all three are
+    bit-exact with each other and with the per-gate reference executor
+    (``quant_lstm_layer_ref``).
+    """
+    h0_q, c0_q = _initial_state(spec, xs_q.shape[0], h0_q, c0_q)
+    return kops.quant_lstm_seq(
+        arrays, spec, xs_q, h0_q, c0_q, backend=backend
+    )
+
+
+def quant_lstm_layer_ref(
+    arrays: Dict[str, Any],
+    spec: QLSTMSpec,
+    xs_q: jax.Array,
+    h0_q: Optional[jax.Array] = None,
+    c0_q: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Reference executor: per-gate matmuls (8 dot_generals per step).
+
+    Kept as the readable ground truth the fused packed path is tested
+    against bit-for-bit.
+    """
+    h0_q, c0_q = _initial_state(spec, xs_q.shape[0], h0_q, c0_q)
 
     def step(carry, x_t):
         h, c = carry

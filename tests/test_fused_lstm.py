@@ -1,0 +1,179 @@
+"""Fused packed [i|f|z|o] LSTM executor vs the per-gate reference.
+
+Covers the PR-1 acceptance gates:
+  * backend="interpret" (Pallas interpreter on CPU) is bit-exact with
+    backend="xla" across all 16 topology variants;
+  * the packed matmul path runs 2 dot_general calls per step where the
+    reference executor runs 8 (jaxpr inspection);
+  * ops.quant_lstm_cell (interpret) matches models.quant_lstm.quant_lstm_cell
+    over CIFG/LayerNorm/peephole variants, including the o-gate-peephole-
+    inside-the-fusion contract;
+  * non-divisible (B, H) shapes tile via the largest-divisor block fix.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fixedpoint as fp
+from repro.core import recipe as R
+from repro.core.calibrate import Stats, TapCollector
+from repro.kernels import ops
+from repro.kernels.quant_lstm_cell import largest_divisor, quant_lstm_cell_pallas
+from repro.models import lstm as L
+from repro.models import quant_lstm as QL
+
+pytestmark = pytest.mark.fast
+
+B, T, D_IN, D_H, D_P = 4, 6, 16, 24, 12
+
+
+def _setup(variant, seed=0, d_h=D_H, b=B):
+    cfg = L.LSTMConfig(D_IN, d_h, D_P if variant.use_projection else 0,
+                       variant)
+    params = L.init_lstm_params(jax.random.PRNGKey(seed), cfg)
+    xs = 0.8 * jax.random.normal(jax.random.PRNGKey(seed + 1), (b, T, D_IN))
+    col = TapCollector()
+    L.lstm_layer(params, cfg, xs, collector=col)
+    stats = Stats()
+    stats.merge(jax.device_get(col.snapshot()))
+    arrays, spec = R.quantize_lstm_layer(params, cfg, stats)
+    return QL.quantize_input(xs, spec.s_x, spec.zp_x), arrays, spec
+
+
+@pytest.mark.parametrize("variant", L.ALL_VARIANTS, ids=lambda v: v.name)
+def test_fused_layer_bitexact_all_variants(variant):
+    """packed/xla == packed/interpret == per-gate reference, bit for bit."""
+    xs_q, arrays, spec = _setup(variant)
+    y_ref, (h_ref, c_ref) = QL.quant_lstm_layer_ref(arrays, spec, xs_q)
+    y_x, (h_x, c_x) = QL.quant_lstm_layer(arrays, spec, xs_q, backend="xla")
+    y_i, (h_i, c_i) = QL.quant_lstm_layer(arrays, spec, xs_q,
+                                          backend="interpret")
+    np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_x))
+    np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_x))
+    np.testing.assert_array_equal(np.asarray(y_x), np.asarray(y_i))
+    np.testing.assert_array_equal(np.asarray(h_x), np.asarray(h_i))
+    np.testing.assert_array_equal(np.asarray(c_x), np.asarray(c_i))
+
+
+def _count_dot_generals(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "dot_general":
+            n += 1
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None:
+                    n += _count_dot_generals(inner)
+    return n
+
+
+def test_packed_step_runs_two_dot_generals():
+    """Acceptance: the packed path cuts per-step dot_general calls 8 -> 2."""
+    variant = L.LSTMVariant()  # no projection: gate matmuls only
+    xs_q, arrays, spec = _setup(variant)
+    h0 = jnp.full((B, D_H), spec.zp_h_out, jnp.int8)
+    c0 = jnp.zeros((B, D_H), jnp.int16)
+
+    fused = jax.make_jaxpr(
+        lambda a, x, h, c: ops.quant_lstm_step(a, spec, x, h, c,
+                                               backend="xla")
+    )(arrays, xs_q[:, 0], h0, c0)
+    reference = jax.make_jaxpr(
+        lambda a, x, h, c: QL.quant_lstm_cell(a, spec, x, h, c)
+    )(arrays, xs_q[:, 0], h0, c0)
+    assert _count_dot_generals(fused.jaxpr) == 2
+    assert _count_dot_generals(reference.jaxpr) == 8
+
+
+@pytest.mark.parametrize("variant", [
+    L.LSTMVariant(),
+    L.LSTMVariant(use_cifg=True),
+    L.LSTMVariant(use_peephole=True),
+    L.LSTMVariant(use_layernorm=True),
+    L.LSTMVariant(use_layernorm=True, use_peephole=True),
+    L.LSTMVariant(use_layernorm=True, use_peephole=True, use_cifg=True),
+], ids=lambda v: v.name)
+def test_ops_cell_interpret_matches_model_cell(variant):
+    """ops.quant_lstm_cell (interpret) vs the per-gate model step: one
+    timestep, CIFG/LayerNorm/peephole coverage (satellite)."""
+    xs_q, arrays, spec = _setup(variant)
+    h0 = jnp.full((B, D_H), spec.zp_h_out, jnp.int8)
+    c0 = jnp.asarray(
+        np.random.default_rng(0).integers(-9000, 9000, (B, D_H)), jnp.int16)
+    h_ref, c_ref = QL.quant_lstm_cell(arrays, spec, xs_q[:, 0], h0, c0)
+    h_fus, c_fus = ops.quant_lstm_step(arrays, spec, xs_q[:, 0], h0, c0,
+                                       backend="interpret")
+    np.testing.assert_array_equal(np.asarray(h_ref), np.asarray(h_fus))
+    np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_fus))
+
+
+def test_o_gate_peephole_contract():
+    """The o-gate peephole MUST be finished against c_new inside the fusion
+    (eq 5).  Pre-activating o against the OLD cell state diverges, proving
+    the contract is load-bearing; the kernel also rejects a peephole request
+    without the int32 accumulator."""
+    variant = L.LSTMVariant(use_peephole=True)
+    xs_q, arrays, spec = _setup(variant, seed=3)
+    h0 = jnp.full((B, D_H), spec.zp_h_out, jnp.int8)
+    c0 = jnp.asarray(
+        np.random.default_rng(1).integers(-9000, 9000, (B, D_H)), jnp.int16)
+    h_good, _ = ops.quant_lstm_step(arrays, spec, xs_q[:, 0], h0, c0,
+                                    backend="interpret")
+    h_ref, _ = QL.quant_lstm_cell(arrays, spec, xs_q[:, 0], h0, c0)
+    np.testing.assert_array_equal(np.asarray(h_good), np.asarray(h_ref))
+
+    # wrong usage: o finished OUTSIDE the fusion against the stale cell c0
+    from repro.models.quant_lstm import _gate
+
+    o16_stale = _gate(arrays, spec, "o", xs_q[:, 0], h0, c0)
+    i16 = _gate(arrays, spec, "i", xs_q[:, 0], h0, c0)
+    f16 = _gate(arrays, spec, "f", xs_q[:, 0], h0, c0)
+    z16 = _gate(arrays, spec, "z", xs_q[:, 0], h0, None)
+    h_bad, _ = ops.quant_lstm_cell(
+        i16, f16, z16, o16_stale, c0,
+        cell_int_bits=spec.cell_int_bits, cifg=False,
+        eff_m=spec.eff_m, zp_m=spec.zp_m, backend="interpret")
+    assert not np.array_equal(np.asarray(h_bad), np.asarray(h_good))
+
+    with pytest.raises(AssertionError):
+        quant_lstm_cell_pallas(
+            i16, f16, z16, o16_stale, c0,  # int16 o + peephole: contract
+            cell_int_bits=spec.cell_int_bits, cifg=False,
+            eff_m=spec.eff_m, zp_m=spec.zp_m,
+            p_o=arrays["P"]["o"], eff_c_o=spec.gate_spec("o").eff_c,
+            interpret=True)
+
+
+def test_largest_divisor():
+    assert largest_divisor(12, 8) == 6
+    assert largest_divisor(40, 512) == 40
+    assert largest_divisor(7, 4) == 1
+    assert largest_divisor(16, 8) == 8
+
+
+@pytest.mark.parametrize("b,h", [(12, 40), (7, 48), (5, 33)])
+def test_cell_kernel_non_divisible_shapes(b, h):
+    """B=12 with default block_b=8 used to trip `B % bb == 0`; the kernel now
+    picks the largest dividing block."""
+    rng = np.random.default_rng(b * h)
+    g = lambda: jnp.asarray(rng.integers(-32768, 32767, (b, h)).astype(np.int16))
+    i16, f16, z16, o16 = g(), g(), g(), g()
+    cq = jnp.asarray(rng.integers(-20000, 20000, (b, h)).astype(np.int16))
+    kw = dict(cell_int_bits=2, cifg=False,
+              eff_m=fp.quantize_multiplier(2.0**-30 / 0.005), zp_m=-4)
+    h1, c1 = ops.quant_lstm_cell(i16, f16, z16, o16, cq,
+                                 backend="interpret", **kw)
+    h2, c2 = ops.quant_lstm_cell(i16, f16, z16, o16, cq, backend="xla", **kw)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_fused_layer_odd_batch():
+    """End-to-end layer with a batch the default block size doesn't divide."""
+    variant = L.LSTMVariant(use_layernorm=True)
+    xs_q, arrays, spec = _setup(variant, b=12)
+    y_x, _ = QL.quant_lstm_layer(arrays, spec, xs_q, backend="xla")
+    y_i, _ = QL.quant_lstm_layer(arrays, spec, xs_q, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(y_x), np.asarray(y_i))

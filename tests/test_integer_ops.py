@@ -8,6 +8,8 @@ from repro.core import integer_ops as io
 from repro.core import qtypes as qt
 from repro.kernels import ref
 
+pytestmark = pytest.mark.fast
+
 
 @pytest.mark.parametrize("n", [256, 1024, 2048, 8192])
 def test_integer_layernorm_vs_float(n):
@@ -93,7 +95,8 @@ def test_zero_point_folding_exact():
     zp = -11
     folded = np.asarray(io.fold_zero_point(jnp.array(W), zp, jnp.array(b)))
     got = np.asarray(io.matmul_i8_i32(jnp.array(x), jnp.array(W))) + folded
-    want = (x.astype(np.int64) + zp) @ W.astype(np.int64) + b
+    # runtime convention: x = s * (x_q - zp), so the fold undoes the zp
+    want = (x.astype(np.int64) - zp) @ W.astype(np.int64) + b
     np.testing.assert_array_equal(got, want)
 
 

@@ -7,6 +7,8 @@ import pytest
 from repro.core import fixedpoint as fp
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.fast
+
 
 @pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 128),
                                    (64, 64, 512), (8, 128, 256)])

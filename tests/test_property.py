@@ -1,6 +1,9 @@
 """Hypothesis property tests on system-wide quantization invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="install the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import fixedpoint as fp

@@ -83,6 +83,34 @@ def test_sliding_window_ring_buffer():
     assert int(state["len"]) == 20
 
 
+def test_int8_lstm_serving_state_continuity():
+    """Integer-only serving: one-shot scanned prefill must produce exactly
+    the logits of step-by-step decode (integer math is deterministic, so this
+    is a bitwise check on the carried int8/int16 states)."""
+    from repro.models import lstm_lm
+
+    cfg = SMOKE_CONFIGS["lstm-rnnt"]
+    bundle = model_zoo.build(cfg)
+    params, _ = bundle.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 7), 0,
+                              cfg.vocab_size)
+    qlayers = lstm_lm.quantize_stack(params, cfg, toks)
+    prefill = jax.jit(lambda p, t, s: lstm_lm.quant_prefill(
+        p, qlayers, cfg, t, s))
+    decode = jax.jit(lambda p, t, s: lstm_lm.quant_decode_step(
+        p, qlayers, cfg, t, s))
+    lp, sp = prefill(params, toks, lstm_lm.init_quant_decode_state(qlayers, 2))
+    state = lstm_lm.init_quant_decode_state(qlayers, 2)
+    for i in range(toks.shape[1]):
+        ld, state = decode(params, toks[:, i:i + 1], state)
+    for k in ("h", "c"):
+        for a, b in zip(sp[k], state[k]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(lp, np.float32),
+                               np.asarray(ld, np.float32), rtol=1e-5,
+                               atol=1e-5)
+
+
 def test_lstm_serving_state_continuity():
     cfg = SMOKE_CONFIGS["lstm-rnnt"]
     bundle = model_zoo.build(cfg)

@@ -1,17 +1,19 @@
 # Developer entry points.  `make check` is the CI gate: it COLLECTS the whole
 # suite first (so import/collection regressions fail loudly and early), then
 # runs the `fast` marker subset with Pallas interpret=True on CPU, bounded by
-# a timeout.
+# a timeout.  BACKEND selects the kernel backend the fast subset runs under
+# (CI runs a {xla, pallas_interpret} matrix).
 PY ?= python
 PYTEST = PYTHONPATH=src $(PY) -m pytest
+BACKEND ?= xla
 
-.PHONY: check test collect bench
+.PHONY: check test collect bench engine-smoke engine-bench
 
 collect:
 	$(PYTEST) -q --collect-only >/dev/null
 
 check: collect
-	timeout 1800 env PYTHONPATH=src REPRO_KERNEL_BACKEND=xla \
+	timeout 2700 env PYTHONPATH=src REPRO_KERNEL_BACKEND=$(BACKEND) \
 		$(PY) -m pytest -q -m fast
 
 test:
@@ -19,3 +21,15 @@ test:
 
 bench:
 	PYTHONPATH=src $(PY) benchmarks/speed.py
+
+# end-to-end continuous-batching serve in under a minute (post-compile):
+# mixed prompt/gen lengths through 8 slots on the smoke LSTM LM
+engine-smoke:
+	timeout 300 env PYTHONPATH=src $(PY) -m repro.launch.serve \
+		--arch lstm-rnnt --smoke --quant int8-lstm --engine \
+		--slots 8 --requests 12 --prompt-len 8 --gen 8
+
+# engine vs sequential serving with the >=2x acceptance gate enforced
+engine-bench:
+	PYTHONPATH=src $(PY) benchmarks/engine_throughput.py \
+		--slots 8 --requests 24 --check-speedup 2.0

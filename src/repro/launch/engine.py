@@ -1,0 +1,400 @@
+"""Slot-based continuous-batching engine for the integer-only LSTM LM.
+
+The serving problem: requests with different prompt lengths and generation
+budgets arrive as a queue, and naive serving decodes them one stream at a
+time (one kernel dispatch per token per stream).  Because integer LSTM
+decode state is just per-stream ``(h, c)`` vectors -- no paged KV cache, no
+attention over a ragged history -- continuous batching is uniquely cheap
+here: a fixed ``(B_slots, H)`` decode batch where
+
+  * pending requests are **admitted** into free slots (the slot's int8
+    hidden / int16 cell rows are reset to their initial values),
+  * admitted streams are **prefilled by teacher-forcing** their prompt
+    through the same fused decode step that drives generation (one token
+    per step, so mixed prefill/decode shares a single jitted program with
+    static shapes -- no per-prompt-length recompilation),
+  * finished streams are **evicted mid-flight** and their slot is re-used
+    by the next pending request on the following step,
+  * ONE jitted fused decode step (PR 1's packed ``[i|f|z|o]`` executor, any
+    ``backend=`` xla | pallas | interpret) advances all slots per iteration,
+    with an **active-mask** freezing the state of empty slots.
+
+Bit-exactness contract (what the test harness locks down): every row of the
+fused integer step is computed independently of the other rows (the packed
+matmuls are per-row, the cell fusion and integer LayerNorm reduce over the
+hidden dim only), and integer arithmetic is deterministic.  Therefore the
+token sequence a stream produces inside a busy engine batch is **bitwise
+identical** to decoding that stream alone (``decode_single``), regardless of
+slot index, co-tenants, or admission order.  ``tests/test_engine.py``
+asserts this per stream, and the golden tests pin the absolute values.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lstm_lm
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: a prompt and a generation budget."""
+
+    rid: int
+    prompt: np.ndarray  # (P,) int32, P >= 1
+    max_new_tokens: int  # >= 1
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        assert self.prompt.size >= 1, "empty prompt"
+        assert self.max_new_tokens >= 1, "need a positive generation budget"
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Finished stream: generated tokens + admission/finish bookkeeping.
+
+    ``truncated`` marks a stream cut off by ``run(max_steps=...)`` before
+    its generation budget was spent (tokens holds the partial output).
+    """
+
+    rid: int
+    tokens: List[int]
+    prompt_len: int
+    admitted_step: int
+    finished_step: int
+    truncated: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int
+    n_slots: int
+    active_slot_steps: int  # sum over steps of #active slots
+    max_active: int  # peak concurrent streams in one step
+    generated_tokens: int
+    prompt_tokens: int
+    wall_s: float
+
+    @property
+    def occupancy(self) -> float:
+        denom = self.steps * self.n_slots
+        return self.active_slot_steps / denom if denom else 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / self.wall_s if self.wall_s else 0.0
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side bookkeeping for one decode-batch row."""
+
+    request: Optional[Request] = None
+    fed: int = 0  # tokens consumed so far (prompt + fed-back generations)
+    generated: List[int] = dataclasses.field(default_factory=list)
+    admitted_step: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+    def next_token(self) -> int:
+        """The token this slot feeds on the upcoming step."""
+        p = self.request.prompt
+        if self.fed < p.size:
+            return int(p[self.fed])  # teacher-forced prefill
+        return self.generated[self.fed - p.size]  # fed-back generation
+
+
+_ENGINE_FNS: Dict[Tuple[int, str], Tuple[Any, Any]] = {}
+_FN_CACHE_MAX = 8  # each entry pins a model's arrays + compiled programs
+
+
+def _cache_put(cache: Dict, key, value) -> None:
+    """FIFO-bounded insert so long-lived processes that quantize many models
+    don't pin every one of them (plus its executables) forever."""
+    if len(cache) >= _FN_CACHE_MAX:
+        cache.pop(next(iter(cache)))
+    cache[key] = value
+
+
+def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
+    """Jitted (step, reset) pair for the engine loop.
+
+    Cached per (qlayers identity, backend) when no sharding constrain is
+    installed, so property tests and repeated engine instances over the
+    same quantized model share compiled programs (the jit itself also
+    specializes per slot count via input shapes).
+    """
+    key = (id(qlayers), backend)
+    if constrain is None and key in _ENGINE_FNS:
+        return _ENGINE_FNS[key]
+
+    def step(params, tokens, state, active):
+        """One engine iteration: all slots advance one token.
+
+        tokens: (S,) int32; active: (S,) bool.  Returns the per-slot
+        greedy next token (argmax over the last-position logits -- the
+        row-wise computation is identical to a batch-1 decode, so the
+        argmax is too) and the new state with inactive rows frozen.
+        """
+        logits, new_state = lstm_lm.quant_forward(
+            params, qlayers, cfg, tokens[:, None], state, backend=backend)
+        greedy = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        mask = active[:, None]
+        out = {
+            "h": [jnp.where(mask, n, o) for n, o in zip(new_state["h"],
+                                                        state["h"])],
+            "c": [jnp.where(mask, n, o) for n, o in zip(new_state["c"],
+                                                        state["c"])],
+            "len": state["len"] + active.astype(jnp.int32),
+        }
+        if constrain is not None:
+            out["h"] = [constrain(h, ("batch", "mlp")) for h in out["h"]]
+            out["c"] = [constrain(c, ("batch", "mlp")) for c in out["c"]]
+        return greedy, out
+
+    fns = (
+        jax.jit(step),
+        jax.jit(lambda state, slot: lstm_lm.reset_quant_slot(
+            qlayers, state, slot)),
+    )
+    if constrain is None:
+        _cache_put(_ENGINE_FNS, key, fns)
+    return fns
+
+
+class ContinuousBatchingEngine:
+    """Drives a fixed-slot decode batch over a queue of requests.
+
+    ``mesh``/``rules``: optional batch-axis sharding hook -- when given, the
+    slot state is placed via ``runtime.sharding.engine_state_shardings`` so
+    the slot dim spreads over the data-parallel mesh axes.
+    """
+
+    def __init__(self, params, qlayers, cfg, n_slots: int, *,
+                 backend: str = "xla", mesh=None, rules=None):
+        assert n_slots >= 1
+        self.params = params
+        self.qlayers = qlayers
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.backend = backend
+        self._slots = [_Slot() for _ in range(n_slots)]
+        self._queue: List[Request] = []
+        self._state = lstm_lm.init_quant_decode_state(
+            qlayers, n_slots, per_slot_len=True)
+        constrain = None
+        if mesh is not None:
+            from repro.runtime import sharding as shlib
+
+            self._state = jax.device_put(
+                self._state,
+                shlib.engine_state_shardings(self._state, rules, mesh))
+            constrain = shlib.make_constrain(rules, mesh)
+        self._step, self._reset = _engine_step_fns(
+            qlayers, cfg, backend, constrain)
+
+    # -- queue management ---------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        # results are keyed by rid; a duplicate would silently shadow a
+        # stream's output, so reject it at the door
+        taken = {r.rid for r in self._queue}
+        taken.update(s.request.rid for s in self._slots if not s.free)
+        if request.rid in taken:
+            raise ValueError(f"duplicate request id {request.rid}")
+        self._queue.append(request)
+
+    def submit_all(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            self.submit(r)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active(self) -> int:
+        return sum(not s.free for s in self._slots)
+
+    # -- the serving loop ---------------------------------------------------
+
+    def _admit(self, step_idx: int) -> None:
+        for i, slot in enumerate(self._slots):
+            if not self._queue:
+                break
+            if not slot.free:
+                continue
+            req = self._queue.pop(0)
+            self._slots[i] = _Slot(request=req, admitted_step=step_idx)
+            self._state = self._reset(self._state, jnp.int32(i))
+
+    def run(self, max_steps: Optional[int] = None
+            ) -> Tuple[Dict[int, StreamResult], EngineStats]:
+        """Serve until the queue and all slots drain.  Returns per-request
+        results keyed by rid plus occupancy/throughput stats."""
+        results: Dict[int, StreamResult] = {}
+        step_idx = 0
+        active_slot_steps = 0
+        max_active = 0
+        prompt_tokens = 0
+        generated = 0
+        t0 = time.perf_counter()
+        while self._queue or any(not s.free for s in self._slots):
+            if max_steps is not None and step_idx >= max_steps:
+                break
+            self._admit(step_idx)
+            tokens = np.zeros((self.n_slots,), np.int32)
+            active = np.zeros((self.n_slots,), bool)
+            for i, slot in enumerate(self._slots):
+                if slot.free:
+                    continue
+                active[i] = True
+                tokens[i] = slot.next_token()
+            active_slot_steps += int(active.sum())
+            max_active = max(max_active, int(active.sum()))
+            greedy, self._state = self._step(
+                self.params, jnp.asarray(tokens), self._state,
+                jnp.asarray(active))
+            greedy = np.asarray(greedy)
+            for i, slot in enumerate(self._slots):
+                if slot.free:
+                    continue
+                req = slot.request
+                in_prefill = slot.fed < req.prompt.size
+                prompt_tokens += int(in_prefill)
+                slot.fed += 1
+                if slot.fed >= req.prompt.size:
+                    # last prompt token consumed, or a fed-back generation:
+                    # this step's logits carry the next generated token
+                    slot.generated.append(int(greedy[i]))
+                if len(slot.generated) >= req.max_new_tokens:
+                    results[req.rid] = StreamResult(
+                        rid=req.rid,
+                        tokens=list(slot.generated),
+                        prompt_len=int(req.prompt.size),
+                        admitted_step=slot.admitted_step,
+                        finished_step=step_idx,
+                    )
+                    generated += len(slot.generated)
+                    self._slots[i] = _Slot()  # evict mid-flight
+            step_idx += 1
+        # hitting max_steps leaves streams in flight: return their partial
+        # generations (marked truncated) instead of silently dropping them
+        for i, slot in enumerate(self._slots):
+            if slot.free:
+                continue
+            req = slot.request
+            results[req.rid] = StreamResult(
+                rid=req.rid,
+                tokens=list(slot.generated),
+                prompt_len=int(req.prompt.size),
+                admitted_step=slot.admitted_step,
+                finished_step=step_idx,
+                truncated=True,
+            )
+            generated += len(slot.generated)
+            self._slots[i] = _Slot()
+        wall = time.perf_counter() - t0
+        stats = EngineStats(
+            steps=step_idx,
+            n_slots=self.n_slots,
+            active_slot_steps=active_slot_steps,
+            max_active=max_active,
+            generated_tokens=generated,
+            prompt_tokens=prompt_tokens,
+            wall_s=wall,
+        )
+        return results, stats
+
+
+# ---------------------------------------------------------------------------
+# Single-stream reference + request traces
+# ---------------------------------------------------------------------------
+
+
+_SINGLE_FNS: Dict[Tuple[int, str], Tuple[Any, Any]] = {}
+
+
+def single_stream_fns(qlayers, cfg, backend: str = "xla"):
+    """Jitted (prefill, decode) pair for batch-1 serving, cached per
+    (qlayers identity, backend) so repeated ``decode_single`` calls reuse
+    the compiled programs instead of re-tracing fresh closures."""
+    key = (id(qlayers), backend)
+    if key not in _SINGLE_FNS:
+        prefill_fn = jax.jit(lambda p, t, s: lstm_lm.quant_prefill(
+            p, qlayers, cfg, t, s, backend=backend))
+        decode_fn = jax.jit(lambda p, t, s: lstm_lm.quant_decode_step(
+            p, qlayers, cfg, t, s, backend=backend))
+        _cache_put(_SINGLE_FNS, key, (prefill_fn, decode_fn))
+    return _SINGLE_FNS[key]
+
+
+def decode_single(params, qlayers, cfg, prompt, max_new_tokens: int, *,
+                  backend: str = "xla",
+                  prefill_fn=None, decode_fn=None) -> List[int]:
+    """Decode ONE stream alone: scanned prefill + greedy loop.
+
+    The bit-exactness oracle for the engine (and the naive serving baseline
+    of ``benchmarks/engine_throughput.py``).  Compiled programs are shared
+    across calls via ``single_stream_fns`` (prefill still specializes per
+    distinct prompt length).
+    """
+    prompt = jnp.asarray(np.asarray(prompt, np.int32).reshape(1, -1))
+    if prefill_fn is None or decode_fn is None:
+        pf, df = single_stream_fns(qlayers, cfg, backend)
+        prefill_fn = prefill_fn or pf
+        decode_fn = decode_fn or df
+    state = lstm_lm.init_quant_decode_state(qlayers, 1)
+    logits, state = prefill_fn(params, prompt, state)
+    out = [int(jnp.argmax(logits, -1)[0])]
+    for _ in range(max_new_tokens - 1):
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, state = decode_fn(params, tok, state)
+        out.append(int(jnp.argmax(logits, -1)[0]))
+    return out
+
+
+def synthetic_trace(n_requests: int, vocab_size: int, *, seed: int = 0,
+                    prompt_lens: Sequence[int] = (4, 6, 8, 12),
+                    gen_lens: Sequence[int] = (4, 8, 12)) -> List[Request]:
+    """A mixed-length request workload with deterministic token content."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for rid in range(n_requests):
+        p = int(rng.choice(list(prompt_lens)))
+        g = int(rng.choice(list(gen_lens)))
+        toks = rng.integers(0, vocab_size, size=(p,), dtype=np.int64)
+        out.append(Request(rid=rid, prompt=toks.astype(np.int32),
+                           max_new_tokens=g))
+    return out
+
+
+def load_trace(path: str, vocab_size: int, *, seed: int = 0) -> List[Request]:
+    """Load a request trace: a JSON list of objects with either an explicit
+    ``prompt`` token list or a ``prompt_len`` (tokens drawn from ``seed``),
+    plus ``gen`` (generation budget) and optional ``id``.
+
+        [{"prompt_len": 12, "gen": 8}, {"prompt": [3, 1, 4], "gen": 4}]
+    """
+    with open(path) as f:
+        entries = json.load(f)
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, e in enumerate(entries):
+        if "prompt" in e:
+            toks = np.asarray(e["prompt"], np.int32)
+        else:
+            toks = rng.integers(
+                0, vocab_size, size=(int(e["prompt_len"]),)).astype(np.int32)
+        out.append(Request(rid=int(e.get("id", i)), prompt=toks,
+                           max_new_tokens=int(e["gen"])))
+    return out

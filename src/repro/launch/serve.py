@@ -6,6 +6,18 @@
     # the paper's integer-only LSTM path (fused [i|f|z|o] executor):
     PYTHONPATH=src python -m repro.launch.serve --arch lstm-rnnt --smoke \
         --quant int8-lstm --backend interpret
+
+Continuous-batching engine mode (``--engine``, int8-lstm only): instead of
+one fixed static batch, a queue of requests with mixed prompt lengths and
+generation budgets is served through ``launch/engine.py`` -- admitted into
+``--slots`` decode-batch rows, prefilled by teacher-forcing through the same
+jitted fused step that decodes, and evicted mid-flight when their budget is
+spent.  The workload is either synthetic (``--requests N``) or a JSON trace
+(``--trace requests.json``, entries ``{"prompt_len"|"prompt", "gen", "id"?}``).
+Every stream's tokens are bit-identical to decoding it alone.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch lstm-rnnt --smoke \
+        --quant int8-lstm --engine --slots 8 --requests 16
 """
 from __future__ import annotations
 
@@ -49,8 +61,9 @@ def _greedy_loop(decode, params, logits, state, n_gen):
     return jnp.concatenate(out_tokens, axis=1)
 
 
-def _serve_int8_lstm(args, cfg) -> None:
-    """Integer-only serving of the stacked LSTM LM (paper sec 3.2 path)."""
+def _quantized_lstm_lm(args, cfg):
+    """Init + calibrate + quantize the stacked LSTM LM once (shared by the
+    static path and the engine path)."""
     from repro.models import lstm_lm, model_zoo
 
     if cfg.family != "lstm":
@@ -66,7 +79,46 @@ def _serve_int8_lstm(args, cfg) -> None:
     qlayers = lstm_lm.quantize_stack(params, cfg, calib)
     print(f"calibrated+quantized {len(qlayers)} LSTM layers "
           f"in {time.time() - t0:.1f}s (backend={args.backend})")
+    return params, qlayers
 
+
+def _serve_engine(args, cfg) -> None:
+    """Continuous-batching serving of the integer LSTM LM."""
+    from repro.launch import engine as E
+
+    params, qlayers = _quantized_lstm_lm(args, cfg)
+    if args.trace:
+        requests = E.load_trace(args.trace, cfg.vocab_size, seed=1)
+    else:
+        requests = E.synthetic_trace(
+            args.requests, cfg.vocab_size, seed=1,
+            prompt_lens=(args.prompt_len // 2 or 1, args.prompt_len),
+            gen_lens=(args.gen // 2 or 1, args.gen))
+    if not requests:
+        raise SystemExit("engine: empty workload (use --requests N >= 1 or "
+                         "a non-empty --trace)")
+    eng = E.ContinuousBatchingEngine(
+        params, qlayers, cfg, n_slots=args.slots, backend=args.backend)
+    eng.submit_all(requests)
+    t0 = time.time()
+    results, stats = eng.run()
+    wall = time.time() - t0
+    print(f"arch={cfg.name} quant=int8-lstm engine slots={args.slots} "
+          f"backend={args.backend}")
+    print(f"served {len(results)}/{len(requests)} requests in {wall:.2f}s "
+          f"({stats.steps} steps)")
+    print(f"decode tokens/s: {stats.generated_tokens / wall:.1f} "
+          f"(+{stats.prompt_tokens} prompt tokens)")
+    print(f"slot occupancy: {stats.occupancy:.2f}")
+    first = results[requests[0].rid]
+    print("sample:", first.tokens)
+
+
+def _serve_int8_lstm(args, cfg) -> None:
+    """Integer-only serving of the stacked LSTM LM (paper sec 3.2 path)."""
+    from repro.models import lstm_lm
+
+    params, qlayers = _quantized_lstm_lm(args, cfg)
     prompt = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
         cfg.vocab_size)
@@ -102,15 +154,30 @@ def main() -> None:
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "pallas", "interpret"],
                     help="integer LSTM kernel backend (int8-lstm only)")
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine (int8-lstm only)")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode-batch rows of the engine")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="synthetic workload size for --engine")
+    ap.add_argument("--trace", default=None,
+                    help="JSON request trace for --engine "
+                         "(see launch/engine.py:load_trace)")
     args = ap.parse_args()
     if args.prompt_len < 1:
         # decode needs at least one teacher-forced token to produce logits
         ap.error("--prompt-len must be >= 1")
+    if args.engine and args.quant != "int8-lstm":
+        ap.error("--engine requires --quant int8-lstm (the integer LSTM LM "
+                 "is the only model with per-slot (h, c) decode state)")
 
     from repro.configs.registry import get_config
     from repro.models import model_zoo, quant_transformer
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.engine:
+        _serve_engine(args, cfg)
+        return
     if args.quant == "int8-lstm":
         _serve_int8_lstm(args, cfg)
         return

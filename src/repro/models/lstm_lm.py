@@ -141,8 +141,13 @@ def quantize_stack(params, cfg: ArchConfig, calib_tokens):
     ]
 
 
-def init_quant_decode_state(qlayers, batch: int):
-    """Integer decode state: int8 hidden (at its zero point) + int16 cell."""
+def init_quant_decode_state(qlayers, batch: int, per_slot_len: bool = False):
+    """Integer decode state: int8 hidden (at its zero point) + int16 cell.
+
+    ``per_slot_len=True`` tracks a per-row ``(batch,)`` token counter instead
+    of one scalar -- what the continuous-batching engine needs, since every
+    slot is at a different position in its stream.
+    """
     from repro.models.quant_lstm import _initial_state
 
     h, c = [], []
@@ -150,7 +155,59 @@ def init_quant_decode_state(qlayers, batch: int):
         h0, c0 = _initial_state(spec, batch, None, None)
         h.append(h0)
         c.append(c0)
-    return {"h": h, "c": c, "len": jnp.zeros((), jnp.int32)}
+    length = jnp.zeros((batch,) if per_slot_len else (), jnp.int32)
+    return {"h": h, "c": c, "len": length}
+
+
+def reset_quant_slot(qlayers, states, slot):
+    """Reset one batch row of the stacked decode state to t=0.
+
+    ``slot`` may be a traced int32 scalar: the continuous-batching engine
+    jits this once and re-uses it for every admission.
+    """
+    from repro.models.quant_lstm import reset_state_rows
+
+    h, c = [], []
+    for (_, spec), h_l, c_l in zip(qlayers, states["h"], states["c"]):
+        h_l, c_l = reset_state_rows(spec, h_l, c_l, slot)
+        h.append(h_l)
+        c.append(c_l)
+    length = states["len"]
+    if length.ndim:
+        length = length.at[slot].set(0)
+    return {"h": h, "c": c, "len": length}
+
+
+def slice_state(states, row):
+    """Extract one stream's decode state as a batch-1 state (bitwise view).
+
+    Inverse of ``stack_state``; row computations are batch-independent, so
+    slicing a slot out of a continuous-batching state and decoding it alone
+    continues the stream bit-exactly.
+    """
+    sl = slice(row, row + 1)
+    length = states["len"]
+    return {
+        "h": [h[sl] for h in states["h"]],
+        "c": [c[sl] for c in states["c"]],
+        "len": length[sl] if length.ndim else length,
+    }
+
+
+def stack_state(state_list):
+    """Concatenate per-stream decode states along the batch axis.
+
+    Every state must come from the same ``qlayers``; scalar ``len`` entries
+    are broadcast to one counter per stacked row.
+    """
+    n_layers = len(state_list[0]["h"])
+    h = [jnp.concatenate([s["h"][i] for s in state_list], axis=0)
+         for i in range(n_layers)]
+    c = [jnp.concatenate([s["c"][i] for s in state_list], axis=0)
+         for i in range(n_layers)]
+    length = jnp.concatenate([
+        s["len"] if s["len"].ndim else s["len"][None] for s in state_list])
+    return {"h": h, "c": c, "len": length}
 
 
 def quant_forward(params, qlayers, cfg: ArchConfig, tokens, states,

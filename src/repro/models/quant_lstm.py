@@ -151,6 +151,23 @@ def _initial_state(
     return h0_q, c0_q
 
 
+def reset_state_rows(
+    spec: QLSTMSpec,
+    h_q: jax.Array,
+    c_q: jax.Array,
+    row: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Reset batch row ``row`` of one layer's decode state to its initial
+    value (hidden at its zero point, cell at integer zero).
+
+    ``row`` may be a traced scalar, so the same jitted reset serves every
+    slot of a continuous-batching decode batch.
+    """
+    h_q = h_q.at[row].set(jnp.int8(spec.zp_h_out))
+    c_q = c_q.at[row].set(jnp.int16(0))
+    return h_q, c_q
+
+
 def quant_lstm_layer(
     arrays: Dict[str, Any],
     spec: QLSTMSpec,

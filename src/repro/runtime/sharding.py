@@ -146,6 +146,23 @@ def batch_logical(batch_tree) -> Any:
     return jax.tree_util.tree_map(leaf, batch_tree)
 
 
+def engine_state_shardings(state_tree, rules, mesh) -> Any:
+    """NamedShardings for a continuous-batching slot state.
+
+    The slot dimension IS the batch dimension: every per-layer ``h``/``c``
+    row (and the per-slot ``len`` counter) spreads over the data-parallel
+    mesh axes, so a multi-device serving deployment scales slots across
+    devices while each stream's integer math stays on one shard (keeping
+    the bit-exactness contract intact -- no cross-row collectives exist in
+    the decode step).  Degrades to fully-replicated specs when the slot
+    count does not divide the DP axes (``resolve`` divisibility rule).
+    """
+    if rules is None:
+        rules = rules_for("tiny")
+    specs = state_logical(state_tree)
+    return tree_shardings(specs, state_tree, rules, mesh)
+
+
 def state_logical(state_tree) -> Any:
     """Decode cache/state logical specs, keyed on (leaf name, rank).
 

@@ -1,0 +1,1 @@
+"""Deterministic golden-data utilities shared by tests and regen scripts."""

@@ -1,0 +1,145 @@
+"""Deterministic golden-case builders for the integer LSTM bit-exactness
+regression harness.
+
+Integer decode is fully deterministic, so small golden outputs (int8/int16
+tensors and greedy tokens) can be checked into the repo and asserted with
+exact equality: any refactor of the fused executor, the recipe, or the
+serving engine that silently changes even one low bit fails loudly.
+
+Two golden families:
+
+* **Per-variant layer cases** -- all 16 topology variants of the paper
+  (LN x Proj x PH x CIFG) run through ``quant_lstm_layer`` on a fixed seeded
+  input; the golden records the full int8 output sequence and the final
+  ``(h, c)`` carry.
+* **LM decode case** -- the smoke ``lstm-rnnt`` stack end-to-end: scanned
+  prefill + greedy decode; the golden records the generated token ids and
+  the final per-layer ``(h, c)``.
+
+Scale derivation happens in float64 numpy offline and calibration runs a
+float32 jax forward; both are deterministic for a fixed platform/jax build
+(the goldens are generated on the CPU CI platform).  Everything after the
+recipe is integer-only and platform-independent.
+
+Regenerate with ``python tests/golden/regen_goldens.py`` after an
+*intentional* numerics change, and say so in the commit message.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import recipe as R
+from repro.core.calibrate import Stats, TapCollector
+from repro.models import lstm as L
+from repro.models import quant_lstm as QL
+
+# layer-case dims: small enough for a readable JSON diff, big enough to
+# exercise packed-matmul tiling and the integer LayerNorm limb math
+B, T, D_IN, D_H, D_P = 2, 5, 8, 12, 6
+
+LM_PROMPT_LEN = 6
+LM_GEN = 8
+
+
+def variant_key(variant: L.LSTMVariant) -> str:
+    return variant.name
+
+
+def build_variant_case(variant: L.LSTMVariant, seed: int = 0):
+    """Deterministic quantized layer + input for one topology variant."""
+    cfg = L.LSTMConfig(D_IN, D_H, D_P if variant.use_projection else 0,
+                       variant)
+    params = L.init_lstm_params(jax.random.PRNGKey(seed), cfg)
+    xs = 0.8 * jax.random.normal(jax.random.PRNGKey(seed + 1), (B, T, D_IN))
+    col = TapCollector()
+    L.lstm_layer(params, cfg, xs, collector=col)
+    stats = Stats()
+    stats.merge(jax.device_get(col.snapshot()))
+    arrays, spec = R.quantize_lstm_layer(params, cfg, stats)
+    xs_q = QL.quantize_input(xs, spec.s_x, spec.zp_x)
+    return xs_q, arrays, spec
+
+
+def execute_case(case, backend: str) -> Dict[str, Any]:
+    """Run a built layer case; returns JSON-ready {ys, h, c} int lists."""
+    xs_q, arrays, spec = case
+    run = jax.jit(lambda a, x: QL.quant_lstm_layer(
+        a, spec, x, backend=backend))
+    ys_q, (h, c) = run(arrays, xs_q)
+    return {
+        "ys": np.asarray(ys_q).astype(int).tolist(),
+        "h": np.asarray(h).astype(int).tolist(),
+        "c": np.asarray(c).astype(int).tolist(),
+    }
+
+
+def run_variant_case(variant: L.LSTMVariant, backend: str = "xla"
+                     ) -> Dict[str, Any]:
+    """Build + execute one layer case (regen entry point)."""
+    return execute_case(build_variant_case(variant), backend)
+
+
+def build_lm_case() -> Tuple[Any, Any, Any, np.ndarray]:
+    """Deterministic quantized smoke LSTM LM + prompt (params, qlayers,
+    cfg, prompt)."""
+    from repro.configs.registry import SMOKE_CONFIGS
+    from repro.models import lstm_lm, model_zoo
+
+    cfg = SMOKE_CONFIGS["lstm-rnnt"]
+    bundle = model_zoo.build(cfg)
+    params, _ = bundle.init(jax.random.PRNGKey(0))
+    calib = jax.random.randint(jax.random.PRNGKey(2), (4, 8), 0,
+                               cfg.vocab_size)
+    qlayers = lstm_lm.quantize_stack(params, cfg, calib)
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, size=(LM_PROMPT_LEN,)).astype(np.int32)
+    return params, qlayers, cfg, prompt
+
+
+def run_lm_case(backend: str = "xla") -> Dict[str, Any]:
+    """Greedy-decode the LM case; returns {tokens, h, c} int lists."""
+    import jax.numpy as jnp
+
+    from repro.models import lstm_lm
+
+    params, qlayers, cfg, prompt = build_lm_case()
+    prefill = jax.jit(lambda p, t, s: lstm_lm.quant_prefill(
+        p, qlayers, cfg, t, s, backend=backend))
+    decode = jax.jit(lambda p, t, s: lstm_lm.quant_decode_step(
+        p, qlayers, cfg, t, s, backend=backend))
+    state = lstm_lm.init_quant_decode_state(qlayers, 1)
+    logits, state = prefill(params, jnp.asarray(prompt[None]), state)
+    tokens = [int(jnp.argmax(logits, -1)[0])]
+    for _ in range(LM_GEN - 1):
+        tok = jnp.asarray([[tokens[-1]]], jnp.int32)
+        logits, state = decode(params, tok, state)
+        tokens.append(int(jnp.argmax(logits, -1)[0]))
+    return {
+        "tokens": tokens,
+        "h": [np.asarray(h).astype(int).tolist() for h in state["h"]],
+        "c": [np.asarray(c).astype(int).tolist() for c in state["c"]],
+    }
+
+
+def generate_goldens() -> Dict[str, Any]:
+    """All golden cases, generated on the xla backend."""
+    out: Dict[str, Any] = {"variants": {}, "lm": run_lm_case(backend="xla")}
+    for variant in L.ALL_VARIANTS:
+        out["variants"][variant_key(variant)] = run_variant_case(
+            variant, backend="xla")
+    return out
+
+
+def write_goldens(path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(generate_goldens(), f, separators=(",", ":"))
+        f.write("\n")
+
+
+def load_goldens(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)

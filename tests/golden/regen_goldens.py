@@ -1,0 +1,23 @@
+#!/usr/bin/env python
+"""Regenerate tests/golden/lstm_goldens.json.
+
+    PYTHONPATH=src python tests/golden/regen_goldens.py
+
+Only run this after an INTENTIONAL integer-numerics change (recipe, fused
+executor, fixed-point primitives) and call the change out in the commit
+message -- the whole point of the goldens is that accidental drift fails CI.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.testing import golden  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "lstm_goldens.json")
+
+if __name__ == "__main__":
+    golden.write_goldens(OUT)
+    data = golden.load_goldens(OUT)
+    print(f"wrote {OUT}: {len(data['variants'])} layer variants + "
+          f"lm tokens {data['lm']['tokens']}")

@@ -1,0 +1,119 @@
+"""Calibration edge cases (satellite): degenerate statistics must still
+produce VALID Table-2 recipes -- finite, non-NaN, strictly positive scales
+and representable fixed-point multipliers -- because production calibration
+sets routinely contain dead activations, constant features, or a single
+utterance."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qtypes as qt
+from repro.core import recipe as R
+from repro.core.calibrate import Stats, TapCollector, calibrate
+from repro.models import lstm as L
+from repro.models import quant_lstm as QL
+
+pytestmark = pytest.mark.fast
+
+D_IN, D_H, D_P = 8, 12, 6
+
+
+def _assert_valid_spec(spec):
+    for name in ("s_x", "s_h", "s_m", "s_c"):
+        s = getattr(spec, name)
+        assert math.isfinite(s) and s > 0.0, f"{name}={s}"
+    for zp in (spec.zp_x, spec.zp_h, spec.zp_m, spec.zp_h_out):
+        assert -128 <= zp <= 127
+    assert spec.cell_int_bits >= 0
+    for g, gs in spec.gates:
+        for pair in (gs.eff_x, gs.eff_h, gs.eff_c, gs.ln_out):
+            if pair is None:
+                continue
+            m0, shift = pair
+            assert 0 <= m0 < 2**31, (g, pair)
+            assert -31 <= shift <= 31, (g, pair)
+    m0, shift = spec.eff_m
+    assert 0 <= m0 < 2**31 and -31 <= shift <= 31
+
+
+def _recipe_from_input(xs, variant=L.LSTMVariant()):
+    cfg = L.LSTMConfig(D_IN, D_H, D_P if variant.use_projection else 0,
+                       variant)
+    params = L.init_lstm_params(jax.random.PRNGKey(0), cfg)
+    col = TapCollector()
+    L.lstm_layer(params, cfg, xs, collector=col)
+    stats = Stats()
+    stats.merge(jax.device_get(col.snapshot()))
+    return R.quantize_lstm_layer(params, cfg, stats), stats, cfg
+
+
+@pytest.mark.parametrize("variant", [
+    L.LSTMVariant(),
+    L.LSTMVariant(use_layernorm=True, use_projection=True),
+], ids=lambda v: v.name)
+def test_constant_zero_activations(variant):
+    """All-zero calibration input: every activation range collapses to a
+    point, yet the recipe must stay finite and executable."""
+    xs = jnp.zeros((2, 4, D_IN))
+    (arrays, spec), stats, cfg = _recipe_from_input(xs, variant)
+    _assert_valid_spec(spec)
+    # and the integer executor runs on it without overflow/assert
+    xs_q = QL.quantize_input(xs, spec.s_x, spec.zp_x)
+    ys, (h, c) = QL.quant_lstm_layer(arrays, spec, xs_q, backend="xla")
+    assert ys.dtype == jnp.int8 and c.dtype == jnp.int16
+
+
+def test_constant_nonzero_activations():
+    """Constant (nonzero) input: zero-range x stats, nonzero gate stats."""
+    xs = 0.7 * jnp.ones((2, 4, D_IN))
+    (arrays, spec), stats, _ = _recipe_from_input(xs)
+    lo, hi = stats.range("x")
+    assert lo == hi  # the degenerate range under test
+    _assert_valid_spec(spec)
+
+
+def test_single_sample_calibration():
+    """One batch through ``calibrate`` (the paper: ~100 utterances suffice;
+    one must at least produce a usable recipe)."""
+    cfg = L.LSTMConfig(D_IN, D_H, 0, L.LSTMVariant())
+    params = L.init_lstm_params(jax.random.PRNGKey(1), cfg)
+
+    def apply_fn(p, batch, collector):
+        L.lstm_layer(p, cfg, batch, collector=collector)
+
+    one_batch = [0.5 * jax.random.normal(jax.random.PRNGKey(2), (1, 1, D_IN))]
+    stats = calibrate(apply_fn, params, one_batch)
+    arrays, spec = R.quantize_lstm_layer(params, cfg, stats)
+    _assert_valid_spec(spec)
+
+
+def test_asymmetric_ranges_nudge_zero_point():
+    """Strongly one-sided ranges: scale positive, zp clamped into int8, and
+    float 0.0 still maps exactly onto an integer (paper sec 3.2.4)."""
+    for lo, hi in [(0.0, 5.0), (-3.0, 0.0), (0.2, 7.0), (-9.0, -0.5),
+                   (0.0, 0.0), (1e-12, 1e-12)]:
+        s, zp = qt.asymmetric_scale_zp(lo, hi, 8)
+        assert math.isfinite(s) and s > 0.0, (lo, hi)
+        assert -128 <= zp <= 127
+        # the nudged zp reproduces 0.0 exactly
+        assert (round(0.0 / s) + zp - zp) * s == 0.0
+        # round-tripping lo lands within half a step of the representable
+        # range (the scheme widens one-sided ranges to include 0.0)
+        ql = np.clip(round(lo / s) + zp, -128, 127)
+        lo_repr = np.clip(lo, (-128 - zp) * s, (127 - zp) * s)
+        assert abs((ql - zp) * s - lo_repr) <= s / 2 + 1e-12
+
+
+def test_stats_merge_and_missing_tap():
+    """Stats aggregates min/max across merges; unknown taps raise a clear
+    KeyError instead of silently producing NaN scales."""
+    st = Stats()
+    st.merge({"x": (jnp.float32(-1.0), jnp.float32(2.0))})
+    st.merge({"x": (jnp.float32(-3.0), jnp.float32(0.5))})
+    assert st.range("x") == (-3.0, 2.0)
+    assert st.max_abs("x") == 3.0
+    with pytest.raises(KeyError):
+        st.range("nope")

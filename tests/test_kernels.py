@@ -79,10 +79,16 @@ def test_int_layernorm_kernel(B, n):
 
 
 def test_backend_dispatch():
-    ops.set_backend("xla")
-    assert ops.get_backend() == "xla"
-    with pytest.raises(AssertionError):
-        ops.set_backend("cuda")
+    prev = ops.get_backend()
+    try:
+        ops.set_backend("xla")
+        assert ops.get_backend() == "xla"
+        with pytest.raises(AssertionError):
+            ops.set_backend("cuda")
+    finally:
+        # restore the env-selected default (the CI backend matrix relies on
+        # REPRO_KERNEL_BACKEND surviving the whole run)
+        ops.set_backend(prev)
 
 
 @pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 64)])

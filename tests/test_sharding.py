@@ -44,6 +44,32 @@ def test_resolve_multi_axis_dp():
     assert spec == shlib.P(("pod", "data")) or spec == shlib.P("pod")
 
 
+def test_engine_state_shardings_slot_axis():
+    """Continuous-batching slot state: the slot dim resolves to the DP mesh
+    axes (h/c/len all shard on dim 0), with divisibility degradation."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    state = {
+        "h": [jnp.zeros((4, 20), jnp.int8)],
+        "c": [jnp.zeros((4, 64), jnp.int16)],
+        "len": jnp.zeros((4,), jnp.int32),
+    }
+    shardings = shlib.engine_state_shardings(
+        state, shlib.rules_for("tiny"), mesh)
+    assert shardings["h"][0].spec == shlib.P("data", None)
+    assert shardings["c"][0].spec == shlib.P("data", None)
+    assert shardings["len"].spec == shlib.P("data")
+    # default rules (None) and odd slot counts still resolve legally
+    state5 = {"h": [jnp.zeros((5, 20), jnp.int8)], "c": [],
+              "len": jnp.zeros((5,), jnp.int32)}
+    sh5 = shlib.engine_state_shardings(state5, None, mesh)
+    assert sh5["h"][0].spec in (shlib.P("data", None), shlib.P(None, None))
+
+
 _WORKER = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

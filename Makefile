@@ -6,8 +6,12 @@
 PY ?= python
 PYTEST = PYTHONPATH=src $(PY) -m pytest
 BACKEND ?= xla
+# engine-smoke knobs: prefill chunk size and the serve-CLI backend name
+# (serve.py takes "interpret" for the pallas_interpret kernel backend)
+CHUNK ?= 1
+SERVE_BACKEND ?= xla
 
-.PHONY: check test collect bench engine-smoke engine-bench
+.PHONY: check test collect bench engine-smoke engine-bench engine-ttft-bench
 
 collect:
 	$(PYTEST) -q --collect-only >/dev/null
@@ -23,13 +27,22 @@ bench:
 	PYTHONPATH=src $(PY) benchmarks/speed.py
 
 # end-to-end continuous-batching serve in under a minute (post-compile):
-# mixed prompt/gen lengths through 8 slots on the smoke LSTM LM
+# mixed prompt/gen lengths through 8 slots on the smoke LSTM LM.
+# `make engine-smoke CHUNK=4` exercises chunked prefill; SERVE_BACKEND
+# selects the kernel backend (xla | pallas | interpret).
 engine-smoke:
 	timeout 300 env PYTHONPATH=src $(PY) -m repro.launch.serve \
 		--arch lstm-rnnt --smoke --quant int8-lstm --engine \
-		--slots 8 --requests 12 --prompt-len 8 --gen 8
+		--slots 8 --requests 12 --prompt-len 8 --gen 8 \
+		--chunk $(CHUNK) --backend $(SERVE_BACKEND)
 
 # engine vs sequential serving with the >=2x acceptance gate enforced
 engine-bench:
 	PYTHONPATH=src $(PY) benchmarks/engine_throughput.py \
-		--slots 8 --requests 24 --check-speedup 2.0
+		--slots 8 --requests 24 --chunk $(CHUNK) --check-speedup 2.0
+
+# chunked prefill on a prompt-heavy trace: mean TTFT must drop >= 2x
+engine-ttft-bench:
+	PYTHONPATH=src $(PY) benchmarks/engine_throughput.py \
+		--slots 8 --requests 12 --prompt-heavy --chunk 4 \
+		--check-ttft-speedup 2.0

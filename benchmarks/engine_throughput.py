@@ -7,15 +7,24 @@ Serves the SAME mixed prompt-length / generation-budget workload two ways:
     ``serve.py`` served before the engine existed;
   * **engine**     -- all requests queued into the slot-based
     continuous-batching engine (one fused decode step drives every active
-    slot per iteration).
+    slot per iteration), optionally with chunked prefill (``--chunk K``:
+    up to K prompt tokens per slot per step as one masked (S, K) dispatch).
 
 Both paths are warmed up first so compile time is excluded; the engine's
-integer outputs are bit-identical to sequential decode (asserted here too,
-on the first/last streams), so the speedup is pure scheduling.
+integer outputs are bit-identical to sequential decode (asserted here on
+EVERY stream), so the speedup is pure scheduling.  Engine wall/throughput
+numbers come from the engine's own ``EngineStats`` (the loop it actually
+timed), not an external stopwatch.
 
     PYTHONPATH=src python benchmarks/engine_throughput.py --slots 8
+    # chunked prefill on a prompt-heavy trace (where chunking pays):
+    PYTHONPATH=src python benchmarks/engine_throughput.py \
+        --slots 8 --chunk 4 --prompt-heavy
 
-Acceptance gate (ISSUE 2): >= 2x generated-tokens/sec at 8 slots.
+Acceptance gates: >= 2x generated-tokens/sec at 8 slots (ISSUE 2,
+``--check-speedup``); with ``--chunk K > 1`` the mean TTFT vs a chunk-1
+engine on the same trace is also reported (ISSUE 3: >= 2x lower on a
+prompt-heavy trace, ``--check-ttft-speedup``).
 """
 from __future__ import annotations
 
@@ -54,14 +63,12 @@ def run_sequential(params, qlayers, cfg, requests, backend):
     return out, tokens / wall, wall
 
 
-def run_engine(params, qlayers, cfg, requests, slots, backend):
+def run_engine(params, qlayers, cfg, requests, slots, backend, chunk):
     eng = E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=slots,
-                                     backend=backend)
+                                     backend=backend, chunk=chunk)
     eng.submit_all(list(requests))
-    t0 = time.perf_counter()
     results, stats = eng.run()
-    wall = time.perf_counter() - t0
-    return results, stats.generated_tokens / wall, wall, stats
+    return results, stats
 
 
 def main() -> int:
@@ -69,60 +76,103 @@ def main() -> int:
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk", type=int, default=1,
+                    help="engine prefill chunk size K (bit-exact vs 1)")
+    ap.add_argument("--prompt-heavy", action="store_true",
+                    help="prompt lens >= 16 with short generations: the "
+                         "regime where chunked prefill pays (TTFT is "
+                         "prefill-dominated)")
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "pallas", "interpret"])
     ap.add_argument("--check-speedup", type=float, default=None,
                     help="exit nonzero unless engine/sequential >= this")
+    ap.add_argument("--check-ttft-speedup", type=float, default=None,
+                    help="exit nonzero unless chunk-1 TTFT / chunk-K TTFT "
+                         ">= this (needs --chunk > 1)")
     args = ap.parse_args()
 
-    # decode-dominant mixed workload (LM serving: short contexts, long
-    # generations).  Sequential serving prefills a whole prompt in ONE
-    # scanned dispatch while the engine teacher-forces one token per step,
-    # so prompt-heavy traces understate the engine win; generation steps are
-    # one dispatch each either way, and that is where batching pays.
+    # decode-dominant mixed workload by default (LM serving: short contexts,
+    # long generations) -- generation steps are one dispatch each either
+    # way, and that is where slot-batching pays.  --prompt-heavy flips the
+    # ratio (long prompts, short generations): TTFT is then dominated by
+    # teacher-forced prefill dispatches, which is where --chunk pays.
     params, qlayers, cfg = build_quantized_lm(args.backend)
+    if args.prompt_heavy:
+        prompt_lens, gen_lens = (16, 20, 24, 32), (4, 8)
+    else:
+        prompt_lens, gen_lens = (2, 4, 6, 8), (8, 16, 24)
     requests = E.synthetic_trace(
         args.requests, cfg.vocab_size, seed=args.seed,
-        prompt_lens=(2, 4, 6, 8), gen_lens=(8, 16, 24))
+        prompt_lens=prompt_lens, gen_lens=gen_lens)
 
     # warmup: compile batch-1 prefill (per distinct prompt length), batch-1
-    # decode, and the slot-batch engine step + reset
+    # decode, and the slot-batch engine step / chunked step + reset
     warm = [E.Request(rid=-1 - i, prompt=r.prompt, max_new_tokens=1)
             for i, r in enumerate(requests)]
     for r in {r.prompt.size: r for r in warm}.values():
         E.decode_single(params, qlayers, cfg, r.prompt, 2,
                         backend=args.backend)
-    weng = E.ContinuousBatchingEngine(params, qlayers, cfg,
-                                      n_slots=args.slots,
-                                      backend=args.backend)
-    weng.submit_all(warm[:args.slots])
-    weng.run()
+    for k in sorted({1, args.chunk}):
+        weng = E.ContinuousBatchingEngine(params, qlayers, cfg,
+                                          n_slots=args.slots,
+                                          backend=args.backend, chunk=k)
+        weng.submit_all(warm[:args.slots])
+        weng.run()
 
     seq_out, seq_tps, seq_wall = run_sequential(
         params, qlayers, cfg, requests, args.backend)
-    eng_out, eng_tps, eng_wall, stats = run_engine(
-        params, qlayers, cfg, requests, args.slots, args.backend)
+    eng_out, stats = run_engine(
+        params, qlayers, cfg, requests, args.slots, args.backend, args.chunk)
 
-    # scheduling must not change a single token
-    for r in (requests[0], requests[-1]):
-        assert eng_out[r.rid].tokens == seq_out[r.rid], \
-            f"engine drifted from sequential on stream {r.rid}"
+    # scheduling (and chunking) must not change a single token, on ANY
+    # stream -- a hard exit, not an assert, so `python -O` can't skip it
+    for r in requests:
+        if eng_out[r.rid].tokens != seq_out[r.rid]:
+            raise SystemExit(
+                f"FAIL: engine drifted from sequential on stream {r.rid}")
 
-    speedup = eng_tps / seq_tps if seq_tps else float("inf")
+    speedup = stats.tokens_per_s / seq_tps if seq_tps else float("inf")
     gen_tokens = sum(len(v) for v in seq_out.values())
     print(f"engine_throughput,arch={cfg.name},backend={args.backend},"
-          f"requests={args.requests},slots={args.slots}")
+          f"requests={args.requests},slots={args.slots},chunk={args.chunk},"
+          f"prompt_heavy={int(args.prompt_heavy)}")
     print(f"engine_throughput/sequential_tok_s,{seq_tps:.1f},"
           f"wall_s={seq_wall:.2f},gen_tokens={gen_tokens}")
-    print(f"engine_throughput/engine_tok_s,{eng_tps:.1f},"
-          f"wall_s={eng_wall:.2f},steps={stats.steps},"
+    print(f"engine_throughput/engine_tok_s,{stats.tokens_per_s:.1f},"
+          f"wall_s={stats.wall_s:.2f},steps={stats.steps},"
           f"occupancy={stats.occupancy:.2f},max_active={stats.max_active}")
+    print(f"engine_throughput/engine_ttft,mean_steps={stats.mean_ttft_steps:.2f},"
+          f"mean_ms={stats.mean_ttft_s * 1e3:.1f},"
+          f"mean_stream_tok_s={stats.mean_stream_tokens_per_s:.1f}")
     print(f"engine_throughput/speedup,{speedup:.2f},slots={args.slots}")
+
+    ttft_speedup = None
+    if args.chunk > 1:
+        # same trace through a chunk-1 engine: the TTFT win is pure chunking
+        _, base = run_engine(params, qlayers, cfg, requests, args.slots,
+                             args.backend, 1)
+        ttft_speedup = (base.mean_ttft_s / stats.mean_ttft_s
+                        if stats.mean_ttft_s else float("inf"))
+        print(f"engine_throughput/ttft_speedup,{ttft_speedup:.2f},"
+              f"chunk1_mean_ms={base.mean_ttft_s * 1e3:.1f},"
+              f"chunk{args.chunk}_mean_ms={stats.mean_ttft_s * 1e3:.1f},"
+              f"chunk1_mean_steps={base.mean_ttft_steps:.2f},"
+              f"chunk{args.chunk}_mean_steps={stats.mean_ttft_steps:.2f}")
+
+    fail = False
     if args.check_speedup is not None and speedup < args.check_speedup:
         print(f"FAIL: speedup {speedup:.2f} < required "
               f"{args.check_speedup:.2f}")
-        return 1
-    return 0
+        fail = True
+    if args.check_ttft_speedup is not None:
+        if ttft_speedup is None:
+            print("FAIL: --check-ttft-speedup needs --chunk > 1")
+            fail = True
+        elif ttft_speedup < args.check_ttft_speedup:
+            print(f"FAIL: TTFT speedup {ttft_speedup:.2f} < required "
+                  f"{args.check_ttft_speedup:.2f}")
+            fail = True
+    return 1 if fail else 0
 
 
 if __name__ == "__main__":

@@ -226,3 +226,47 @@ def quant_lstm_seq(
 
     (h, c), ys = jax.lax.scan(step, (h0_q, c0_q), jnp.swapaxes(xs_q, 0, 1))
     return jnp.swapaxes(ys, 0, 1), (h, c)
+
+
+def quant_lstm_seq_masked(
+    arrays: Dict[str, Any],
+    spec,
+    xs_q: jax.Array,  # int8 (B, T, d_in)
+    h0_q: jax.Array,
+    c0_q: jax.Array,
+    valid_len: jax.Array,  # int32 (B,), per-row number of live timesteps
+    *,
+    backend: Optional[str] = None,
+    **block_kw,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Ragged-length fused executor: row b advances only for t < valid_len[b].
+
+    The chunked-prefill workhorse: a ``(B, K)`` token block where every row
+    owns a different number of real tokens (a slot mid-generation feeds 1, a
+    slot with 3 prompt tokens left feeds 3, an empty slot feeds 0).  Each
+    timestep runs the same ``quant_lstm_step`` as the unmasked scan and then
+    freezes ``(h, c)`` for rows already past their valid length, so a row's
+    state trajectory is **bitwise identical** to feeding its valid prefix one
+    token at a time -- rows are computed independently (per-row matmuls, LN
+    reduces over hidden only) and ``where`` with a true mask returns the new
+    value unchanged.  Frozen rows burn compute on stale inputs but their
+    results are discarded, which is what keeps the program shape static.
+    """
+    b = _resolve(backend)
+
+    def step(carry, inp):
+        h, c = carry
+        x_t, t = inp
+        h_new, c_new = quant_lstm_step(
+            arrays, spec, x_t, h, c, backend=b, **block_kw
+        )
+        live = (t < valid_len)[:, None]
+        h = jnp.where(live, h_new, h)
+        c = jnp.where(live, c_new, c)
+        return (h, c), h
+
+    T = xs_q.shape[1]
+    ts = jnp.arange(T, dtype=valid_len.dtype)
+    (h, c), ys = jax.lax.scan(
+        step, (h0_q, c0_q), (jnp.swapaxes(xs_q, 0, 1), ts))
+    return jnp.swapaxes(ys, 0, 1), (h, c)

@@ -12,7 +12,12 @@ here: a fixed ``(B_slots, H)`` decode batch where
   * admitted streams are **prefilled by teacher-forcing** their prompt
     through the same fused decode step that drives generation (one token
     per step, so mixed prefill/decode shares a single jitted program with
-    static shapes -- no per-prompt-length recompilation),
+    static shapes -- no per-prompt-length recompilation); with
+    ``chunk=K > 1`` a second jitted **chunked-prefill** program feeds each
+    slot up to K prompt tokens per step as an ``(S, K)`` block with per-slot
+    valid lengths (the masked ragged executor freezes each row's state past
+    its valid prefix), cutting time-to-first-token for long prompts ~K-fold
+    while staying bit-exact,
   * finished streams are **evicted mid-flight** and their slot is re-used
     by the next pending request on the following step,
   * ONE jitted fused decode step (PR 1's packed ``[i|f|z|o]`` executor, any
@@ -51,9 +56,14 @@ class Request:
     max_new_tokens: int  # >= 1
 
     def __post_init__(self):
+        # plain raises, not assert: engine invariants must survive python -O
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
-        assert self.prompt.size >= 1, "empty prompt"
-        assert self.max_new_tokens >= 1, "need a positive generation budget"
+        if self.prompt.size < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"request {self.rid}: max_new_tokens must be >= 1, "
+                f"got {self.max_new_tokens}")
 
 
 @dataclasses.dataclass
@@ -62,6 +72,16 @@ class StreamResult:
 
     ``truncated`` marks a stream cut off by ``run(max_steps=...)`` before
     its generation budget was spent (tokens holds the partial output).
+
+    Latency metrics (``None`` when the stream never emitted a token, i.e. it
+    was truncated mid-prefill):
+
+    * ``ttft_steps`` -- engine steps from admission through the step that
+      produced the first generated token, inclusive (so a 1-prompt-token
+      request has TTFT of 1 step).  Deterministic for a given workload/chunk.
+    * ``ttft_s``     -- wall-clock from admission to the first token.
+    * ``tokens_per_s`` -- generated tokens over the stream's residency
+      (admission wall-clock to finish wall-clock).
     """
 
     rid: int
@@ -70,6 +90,9 @@ class StreamResult:
     admitted_step: int
     finished_step: int
     truncated: bool = False
+    ttft_steps: Optional[int] = None
+    ttft_s: Optional[float] = None
+    tokens_per_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -81,6 +104,11 @@ class EngineStats:
     generated_tokens: int
     prompt_tokens: int
     wall_s: float
+    chunk: int = 1  # prefill chunk size the engine ran with
+    # request-level latency aggregates over streams that emitted >= 1 token
+    mean_ttft_steps: float = 0.0
+    mean_ttft_s: float = 0.0
+    mean_stream_tokens_per_s: float = 0.0
 
     @property
     def occupancy(self) -> float:
@@ -100,6 +128,9 @@ class _Slot:
     fed: int = 0  # tokens consumed so far (prompt + fed-back generations)
     generated: List[int] = dataclasses.field(default_factory=list)
     admitted_step: int = 0
+    admit_wall: float = 0.0
+    first_token_step: Optional[int] = None
+    first_token_wall: Optional[float] = None
 
     @property
     def free(self) -> bool:
@@ -113,7 +144,7 @@ class _Slot:
         return self.generated[self.fed - p.size]  # fed-back generation
 
 
-_ENGINE_FNS: Dict[Tuple[int, str], Tuple[Any, Any]] = {}
+_ENGINE_FNS: Dict[Tuple[int, str], Tuple[Any, Any, Any, Any]] = {}
 _FN_CACHE_MAX = 8  # each entry pins a model's arrays + compiled programs
 
 
@@ -126,16 +157,26 @@ def _cache_put(cache: Dict, key, value) -> None:
 
 
 def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
-    """Jitted (step, reset) pair for the engine loop.
+    """Jitted (step, chunk_step, chunk_advance, reset) quadruple for the
+    engine loop.
 
     Cached per (qlayers identity, backend) when no sharding constrain is
     installed, so property tests and repeated engine instances over the
     same quantized model share compiled programs (the jit itself also
-    specializes per slot count via input shapes).
+    specializes per slot count / chunk size via input shapes).
     """
     key = (id(qlayers), backend)
     if constrain is None and key in _ENGINE_FNS:
         return _ENGINE_FNS[key]
+
+    def constrain_state(out):
+        """Re-apply the batch-axis sharding constraint to a new state."""
+        if constrain is None:
+            return out
+        out = dict(out)
+        out["h"] = [constrain(h, ("batch", "mlp")) for h in out["h"]]
+        out["c"] = [constrain(c, ("batch", "mlp")) for c in out["c"]]
+        return out
 
     def step(params, tokens, state, active):
         """One engine iteration: all slots advance one token.
@@ -156,13 +197,38 @@ def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
                                                         state["c"])],
             "len": state["len"] + active.astype(jnp.int32),
         }
-        if constrain is not None:
-            out["h"] = [constrain(h, ("batch", "mlp")) for h in out["h"]]
-            out["c"] = [constrain(c, ("batch", "mlp")) for c in out["c"]]
-        return greedy, out
+        return greedy, constrain_state(out)
+
+    def chunk_step(params, tokens, state, valid):
+        """One chunked-prefill iteration: slot i advances valid[i] tokens.
+
+        tokens: (S, K) int32; valid: (S,) int32 in [0, K].  The ragged
+        masked executor freezes each row's per-layer (h, c) and its ``len``
+        counter beyond its valid length (valid == 0 rows are frozen
+        entirely, subsuming the one-token step's active mask), so every
+        row's state after the block is bitwise identical to feeding its
+        valid prefix one token at a time.  Returns the greedy argmax over
+        each row's LAST VALID position -- the only logits computed from
+        live state.
+        """
+        logits, out = lstm_lm.quant_chunk_step(
+            params, qlayers, cfg, tokens, state, valid, backend=backend)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy, constrain_state(out)
+
+    def chunk_advance(params, tokens, state, valid):
+        """Chunked iteration where NO slot emits a token this step (every
+        active row is mid-prompt with > K tokens still to feed): advance
+        state only, no LM head, no greedy output -- so the engine loop can
+        dispatch consecutive prefill chunks without a host sync."""
+        out = lstm_lm.quant_chunk_advance(
+            params, qlayers, cfg, tokens, state, valid, backend=backend)
+        return constrain_state(out)
 
     fns = (
         jax.jit(step),
+        jax.jit(chunk_step),
+        jax.jit(chunk_advance),
         jax.jit(lambda state, slot: lstm_lm.reset_quant_slot(
             qlayers, state, slot)),
     )
@@ -174,24 +240,39 @@ def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
 class ContinuousBatchingEngine:
     """Drives a fixed-slot decode batch over a queue of requests.
 
+    ``chunk``: prefill chunk size K.  With ``chunk > 1`` a second jitted
+    program teacher-forces up to K prompt tokens per slot per engine step as
+    an ``(S, K)`` block with per-slot valid lengths (slots mid-generation
+    feed 1 token in the same step), cutting time-to-first-token for long
+    prompts by ~K dispatches while staying bit-exact with ``chunk=1`` and
+    with ``decode_single``.  Steps where no slot has >= 2 prompt tokens left
+    fall back to the one-token program, so pure generation never pays the
+    K-wide block.
+
     ``mesh``/``rules``: optional batch-axis sharding hook -- when given, the
-    slot state is placed via ``runtime.sharding.engine_state_shardings`` so
-    the slot dim spreads over the data-parallel mesh axes.
+    slot state is placed via ``runtime.sharding.engine_state_shardings`` and
+    per-step token/valid blocks via ``engine_block_sharding``, so the slot
+    dim spreads consistently over the data-parallel mesh axes.
     """
 
     def __init__(self, params, qlayers, cfg, n_slots: int, *,
-                 backend: str = "xla", mesh=None, rules=None):
-        assert n_slots >= 1
+                 backend: str = "xla", chunk: int = 1, mesh=None, rules=None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.params = params
         self.qlayers = qlayers
         self.cfg = cfg
         self.n_slots = n_slots
         self.backend = backend
+        self.chunk = chunk
         self._slots = [_Slot() for _ in range(n_slots)]
         self._queue: List[Request] = []
         self._state = lstm_lm.init_quant_decode_state(
             qlayers, n_slots, per_slot_len=True)
         constrain = None
+        self._put = lambda x: x
         if mesh is not None:
             from repro.runtime import sharding as shlib
 
@@ -199,8 +280,20 @@ class ContinuousBatchingEngine:
                 self._state,
                 shlib.engine_state_shardings(self._state, rules, mesh))
             constrain = shlib.make_constrain(rules, mesh)
-        self._step, self._reset = _engine_step_fns(
-            qlayers, cfg, backend, constrain)
+            # only two input shapes ever occur ((S,) and (S, K)): resolve
+            # each sharding once, not twice per step on the serving hot loop
+            shard_cache: Dict[Tuple[int, ...], Any] = {}
+
+            def _put(x):
+                s = shard_cache.get(x.shape)
+                if s is None:
+                    s = shard_cache[x.shape] = shlib.engine_block_sharding(
+                        x.shape, rules, mesh)
+                return jax.device_put(x, s)
+
+            self._put = _put
+        (self._step, self._chunk_step, self._chunk_advance,
+         self._reset) = _engine_step_fns(qlayers, cfg, backend, constrain)
 
     # -- queue management ---------------------------------------------------
 
@@ -227,20 +320,42 @@ class ContinuousBatchingEngine:
 
     # -- the serving loop ---------------------------------------------------
 
-    def _admit(self, step_idx: int) -> None:
+    def _admit(self, step_idx: int, now: float) -> None:
         for i, slot in enumerate(self._slots):
             if not self._queue:
                 break
             if not slot.free:
                 continue
             req = self._queue.pop(0)
-            self._slots[i] = _Slot(request=req, admitted_step=step_idx)
+            self._slots[i] = _Slot(request=req, admitted_step=step_idx,
+                                   admit_wall=now)
             self._state = self._reset(self._state, jnp.int32(i))
+
+    def _result(self, slot: _Slot, finished_step: int, now: float,
+                truncated: bool) -> StreamResult:
+        req = slot.request
+        ttft_steps = ttft_s = tps = None
+        if slot.generated and slot.first_token_step is not None:
+            ttft_steps = slot.first_token_step - slot.admitted_step + 1
+            ttft_s = slot.first_token_wall - slot.admit_wall
+            span = now - slot.admit_wall
+            tps = len(slot.generated) / span if span > 0 else float("inf")
+        return StreamResult(
+            rid=req.rid,
+            tokens=list(slot.generated),
+            prompt_len=int(req.prompt.size),
+            admitted_step=slot.admitted_step,
+            finished_step=finished_step,
+            truncated=truncated,
+            ttft_steps=ttft_steps,
+            ttft_s=ttft_s,
+            tokens_per_s=tps,
+        )
 
     def run(self, max_steps: Optional[int] = None
             ) -> Tuple[Dict[int, StreamResult], EngineStats]:
         """Serve until the queue and all slots drain.  Returns per-request
-        results keyed by rid plus occupancy/throughput stats."""
+        results keyed by rid plus occupancy/throughput/latency stats."""
         results: Dict[int, StreamResult] = {}
         step_idx = 0
         active_slot_steps = 0
@@ -251,59 +366,96 @@ class ContinuousBatchingEngine:
         while self._queue or any(not s.free for s in self._slots):
             if max_steps is not None and step_idx >= max_steps:
                 break
-            self._admit(step_idx)
-            tokens = np.zeros((self.n_slots,), np.int32)
-            active = np.zeros((self.n_slots,), bool)
+            self._admit(step_idx, time.perf_counter())
+            # chunked prefill only pays when some slot still has >= 2 prompt
+            # tokens to teacher-force; otherwise use the one-token program
+            # so pure generation never pays the K-wide block
+            chunk = 1
+            if self.chunk > 1 and any(
+                    not s.free and s.request.prompt.size - s.fed >= 2
+                    for s in self._slots):
+                chunk = self.chunk
+            tokens = np.zeros((self.n_slots, chunk), np.int32)
+            valid = np.zeros((self.n_slots,), np.int32)
             for i, slot in enumerate(self._slots):
                 if slot.free:
                     continue
-                active[i] = True
-                tokens[i] = slot.next_token()
-            active_slot_steps += int(active.sum())
-            max_active = max(max_active, int(active.sum()))
-            greedy, self._state = self._step(
-                self.params, jnp.asarray(tokens), self._state,
-                jnp.asarray(active))
-            greedy = np.asarray(greedy)
+                rem = slot.request.prompt.size - slot.fed
+                if rem >= 1:  # teacher-forced prefill: up to `chunk` tokens
+                    n = min(chunk, rem)
+                    tokens[i, :n] = slot.request.prompt[
+                        slot.fed:slot.fed + n]
+                else:  # mid-generation: feed back the latest token
+                    n = 1
+                    tokens[i, 0] = slot.next_token()
+                valid[i] = n
+            n_active = int((valid > 0).sum())
+            active_slot_steps += n_active
+            max_active = max(max_active, n_active)
+            if chunk == 1:
+                greedy, self._state = self._step(
+                    self.params, self._put(jnp.asarray(tokens[:, 0])),
+                    self._state, self._put(jnp.asarray(valid > 0)))
+            else:
+                # a slot emits a token this step iff it consumes its last
+                # prompt token (0 < remaining <= chunk) or is generating
+                # (remaining == 0).  When nothing emits, the logits would
+                # never be read: run the head-free advance program and skip
+                # the host sync so consecutive prefill chunks pipeline.
+                emits = any(
+                    not s.free and
+                    s.request.prompt.size - s.fed <= chunk
+                    for s in self._slots)
+                if emits:
+                    greedy, self._state = self._chunk_step(
+                        self.params, self._put(jnp.asarray(tokens)),
+                        self._state, self._put(jnp.asarray(valid)))
+                else:
+                    greedy = None
+                    self._state = self._chunk_advance(
+                        self.params, self._put(jnp.asarray(tokens)),
+                        self._state, self._put(jnp.asarray(valid)))
+            if greedy is not None:
+                greedy = np.asarray(greedy)
+            now = time.perf_counter()
             for i, slot in enumerate(self._slots):
                 if slot.free:
                     continue
                 req = slot.request
-                in_prefill = slot.fed < req.prompt.size
-                prompt_tokens += int(in_prefill)
-                slot.fed += 1
+                n = int(valid[i])
+                # prompt tokens consumed this step (0 when mid-generation)
+                prompt_tokens += min(n, max(int(req.prompt.size) - slot.fed,
+                                            0))
+                slot.fed += n
                 if slot.fed >= req.prompt.size:
                     # last prompt token consumed, or a fed-back generation:
                     # this step's logits carry the next generated token
+                    # (greedy is always materialized on such steps: reaching
+                    # fed >= prompt.size implies `emits` was True above)
                     slot.generated.append(int(greedy[i]))
+                    if len(slot.generated) == 1:
+                        slot.first_token_step = step_idx
+                        slot.first_token_wall = now
                 if len(slot.generated) >= req.max_new_tokens:
-                    results[req.rid] = StreamResult(
-                        rid=req.rid,
-                        tokens=list(slot.generated),
-                        prompt_len=int(req.prompt.size),
-                        admitted_step=slot.admitted_step,
-                        finished_step=step_idx,
-                    )
+                    results[req.rid] = self._result(
+                        slot, step_idx, now, truncated=False)
                     generated += len(slot.generated)
                     self._slots[i] = _Slot()  # evict mid-flight
             step_idx += 1
         # hitting max_steps leaves streams in flight: return their partial
-        # generations (marked truncated) instead of silently dropping them
+        # generations (marked truncated) instead of silently dropping them.
+        # The step that actually ran last is step_idx - 1 (step_idx was
+        # already advanced past it), matching mid-flight eviction's stamps.
+        now = time.perf_counter()
         for i, slot in enumerate(self._slots):
             if slot.free:
                 continue
-            req = slot.request
-            results[req.rid] = StreamResult(
-                rid=req.rid,
-                tokens=list(slot.generated),
-                prompt_len=int(req.prompt.size),
-                admitted_step=slot.admitted_step,
-                finished_step=step_idx,
-                truncated=True,
-            )
+            results[slot.request.rid] = self._result(
+                slot, max(step_idx - 1, 0), now, truncated=True)
             generated += len(slot.generated)
             self._slots[i] = _Slot()
         wall = time.perf_counter() - t0
+        ttfts = [r for r in results.values() if r.ttft_steps is not None]
         stats = EngineStats(
             steps=step_idx,
             n_slots=self.n_slots,
@@ -312,6 +464,14 @@ class ContinuousBatchingEngine:
             generated_tokens=generated,
             prompt_tokens=prompt_tokens,
             wall_s=wall,
+            chunk=self.chunk,
+            mean_ttft_steps=(sum(r.ttft_steps for r in ttfts) / len(ttfts)
+                             if ttfts else 0.0),
+            mean_ttft_s=(sum(r.ttft_s for r in ttfts) / len(ttfts)
+                         if ttfts else 0.0),
+            mean_stream_tokens_per_s=(
+                sum(r.tokens_per_s for r in ttfts) / len(ttfts)
+                if ttfts else 0.0),
         )
         return results, stats
 
@@ -384,17 +544,45 @@ def load_trace(path: str, vocab_size: int, *, seed: int = 0) -> List[Request]:
     plus ``gen`` (generation budget) and optional ``id``.
 
         [{"prompt_len": 12, "gen": 8}, {"prompt": [3, 1, 4], "gen": 4}]
+
+    Malformed entries (missing keys, empty prompt, non-positive lengths or
+    budgets) raise ``ValueError`` naming the offending entry instead of
+    failing deep inside the engine.
     """
     with open(path) as f:
         entries = json.load(f)
+    if not isinstance(entries, list):
+        raise ValueError(
+            f"trace {path}: expected a JSON list of request objects, "
+            f"got {type(entries).__name__}")
     rng = np.random.default_rng(seed)
     out = []
     for i, e in enumerate(entries):
+        if not isinstance(e, dict):
+            raise ValueError(
+                f"trace {path} entry {i}: expected an object, "
+                f"got {type(e).__name__}")
+        if "gen" not in e:
+            raise ValueError(f"trace {path} entry {i}: missing 'gen'")
+        gen = int(e["gen"])
+        if gen < 1:
+            raise ValueError(
+                f"trace {path} entry {i}: 'gen' must be >= 1, got {gen}")
         if "prompt" in e:
-            toks = np.asarray(e["prompt"], np.int32)
+            toks = np.asarray(e["prompt"], np.int32).reshape(-1)
+            if toks.size < 1:
+                raise ValueError(
+                    f"trace {path} entry {i}: 'prompt' is empty")
+        elif "prompt_len" in e:
+            plen = int(e["prompt_len"])
+            if plen < 1:
+                raise ValueError(
+                    f"trace {path} entry {i}: 'prompt_len' must be >= 1, "
+                    f"got {plen}")
+            toks = rng.integers(0, vocab_size, size=(plen,)).astype(np.int32)
         else:
-            toks = rng.integers(
-                0, vocab_size, size=(int(e["prompt_len"]),)).astype(np.int32)
+            raise ValueError(
+                f"trace {path} entry {i}: needs 'prompt' or 'prompt_len'")
         out.append(Request(rid=int(e.get("id", i)), prompt=toks,
-                           max_new_tokens=int(e["gen"])))
+                           max_new_tokens=gen))
     return out

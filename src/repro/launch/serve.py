@@ -12,12 +12,17 @@ one fixed static batch, a queue of requests with mixed prompt lengths and
 generation budgets is served through ``launch/engine.py`` -- admitted into
 ``--slots`` decode-batch rows, prefilled by teacher-forcing through the same
 jitted fused step that decodes, and evicted mid-flight when their budget is
-spent.  The workload is either synthetic (``--requests N``) or a JSON trace
-(``--trace requests.json``, entries ``{"prompt_len"|"prompt", "gen", "id"?}``).
-Every stream's tokens are bit-identical to decoding it alone.
+spent.  ``--chunk K`` enables chunked prefill: up to K prompt tokens per
+slot per engine step (one masked ``(S, K)`` dispatch instead of K), cutting
+time-to-first-token ~K-fold on prompt-heavy workloads while every stream
+stays bit-identical to ``--chunk 1`` and to decoding it alone.  The
+workload is either synthetic (``--requests N``) or a JSON trace (``--trace
+requests.json``, entries ``{"prompt_len"|"prompt", "gen", "id"?}``).
+Reported metrics include mean TTFT (steps + wall-clock) and per-stream
+tokens/sec.
 
     PYTHONPATH=src python -m repro.launch.serve --arch lstm-rnnt --smoke \
-        --quant int8-lstm --engine --slots 8 --requests 16
+        --quant int8-lstm --engine --slots 8 --requests 16 --chunk 4
 """
 from __future__ import annotations
 
@@ -98,18 +103,20 @@ def _serve_engine(args, cfg) -> None:
         raise SystemExit("engine: empty workload (use --requests N >= 1 or "
                          "a non-empty --trace)")
     eng = E.ContinuousBatchingEngine(
-        params, qlayers, cfg, n_slots=args.slots, backend=args.backend)
+        params, qlayers, cfg, n_slots=args.slots, backend=args.backend,
+        chunk=args.chunk)
     eng.submit_all(requests)
-    t0 = time.time()
     results, stats = eng.run()
-    wall = time.time() - t0
     print(f"arch={cfg.name} quant=int8-lstm engine slots={args.slots} "
-          f"backend={args.backend}")
-    print(f"served {len(results)}/{len(requests)} requests in {wall:.2f}s "
-          f"({stats.steps} steps)")
-    print(f"decode tokens/s: {stats.generated_tokens / wall:.1f} "
+          f"chunk={args.chunk} backend={args.backend}")
+    print(f"served {len(results)}/{len(requests)} requests in "
+          f"{stats.wall_s:.2f}s ({stats.steps} steps)")
+    print(f"decode tokens/s: {stats.tokens_per_s:.1f} "
           f"(+{stats.prompt_tokens} prompt tokens)")
     print(f"slot occupancy: {stats.occupancy:.2f}")
+    print(f"mean TTFT: {stats.mean_ttft_steps:.1f} steps / "
+          f"{stats.mean_ttft_s * 1e3:.1f} ms; "
+          f"mean stream tokens/s: {stats.mean_stream_tokens_per_s:.1f}")
     first = results[requests[0].rid]
     print("sample:", first.tokens)
 
@@ -158,6 +165,14 @@ def main() -> None:
                     help="continuous-batching engine (int8-lstm only)")
     ap.add_argument("--slots", type=int, default=8,
                     help="decode-batch rows of the engine")
+    ap.add_argument("--chunk", type=int, default=1,
+                    help="prefill chunk size K for --engine: feed up to K "
+                         "prompt tokens per slot per step (one masked "
+                         "(S, K) dispatch instead of K one-token steps). "
+                         "Cuts TTFT ~K-fold on prompt-heavy workloads; "
+                         "bit-exact vs --chunk 1. Pure generation is "
+                         "unaffected, so K>1 only helps when prompts are "
+                         "long relative to generation budgets")
     ap.add_argument("--requests", type=int, default=16,
                     help="synthetic workload size for --engine")
     ap.add_argument("--trace", default=None,
@@ -167,6 +182,8 @@ def main() -> None:
     if args.prompt_len < 1:
         # decode needs at least one teacher-forced token to produce logits
         ap.error("--prompt-len must be >= 1")
+    if args.chunk < 1:
+        ap.error("--chunk must be >= 1")
     if args.engine and args.quant != "int8-lstm":
         ap.error("--engine requires --quant int8-lstm (the integer LSTM LM "
                  "is the only model with per-slot (h, c) decode state)")

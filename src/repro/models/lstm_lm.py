@@ -210,13 +210,19 @@ def stack_state(state_list):
     return {"h": h, "c": c, "len": length}
 
 
-def quant_forward(params, qlayers, cfg: ArchConfig, tokens, states,
-                  backend: str = "xla"):
-    """Integer LSTM stack over ``tokens``: (B, T) -> logits (B, T, V).
+def _quant_stack(params, qlayers, tokens, states, backend, valid_len=None):
+    """Run the integer LSTM stack over a ``(B, T)`` token block.
 
     Each layer quantizes its float input with its own calibrated (s_x, zp_x),
     runs the fused integer executor (``backend`` = xla | pallas | interpret),
-    and dequantizes for the next layer / the LM head.
+    and dequantizes for the next layer.  Returns the float stack output
+    ``(B, T, d_proj)`` plus the new per-layer states.
+
+    ``valid_len`` (int32 ``(B,)``) selects the ragged masked executor: row b
+    consumes only its first ``valid_len[b]`` tokens and freezes its
+    per-layer ``(h, c)`` (and ``len`` counter) beyond that -- the chunked
+    prefill path.  Outputs at positions ``>= valid_len[b]`` come from frozen
+    state and must be ignored by the caller.
     """
     from repro.models import quant_lstm as QL
 
@@ -226,16 +232,65 @@ def quant_forward(params, qlayers, cfg: ArchConfig, tokens, states,
         x_q = QL.quantize_input(x, spec.s_x, spec.zp_x)
         ys_q, (h, c) = QL.quant_lstm_layer(
             arrays, spec, x_q, states["h"][i], states["c"][i],
-            backend=backend)
+            backend=backend, valid_len=valid_len)
         x = QL.dequantize_output(ys_q, spec.s_h, spec.zp_h_out)
         new_h.append(h)
         new_c.append(c)
-    logits = emb.logits_head(params, x.astype(jnp.bfloat16))
-    return logits, {
+    advanced = tokens.shape[1] if valid_len is None else valid_len
+    return x, {
         "h": new_h,
         "c": new_c,
-        "len": states["len"] + tokens.shape[1],
+        "len": states["len"] + advanced,
     }
+
+
+def quant_forward(params, qlayers, cfg: ArchConfig, tokens, states,
+                  backend: str = "xla", valid_len=None):
+    """Integer LSTM stack over ``tokens``: (B, T) -> logits (B, T, V).
+
+    See ``_quant_stack`` for the layer pipeline and the ``valid_len``
+    (ragged chunked-prefill) semantics.
+    """
+    x, new_states = _quant_stack(params, qlayers, tokens, states, backend,
+                                 valid_len)
+    logits = emb.logits_head(params, x.astype(jnp.bfloat16))
+    return logits, new_states
+
+
+def quant_chunk_step(params, qlayers, cfg: ArchConfig, tokens, states,
+                     valid_len, backend: str = "xla"):
+    """Chunked-prefill step: ragged stack over a ``(B, K)`` block, LM head
+    evaluated ONLY at each row's last valid position.
+
+    The engine reads one next-token distribution per row, so running the
+    vocab matmul over all K positions wastes (K-1)/K of the head compute --
+    gather the ``(B, d_proj)`` last-valid hidden first, then project once.
+    Rows with ``valid_len == 0`` gather position 0; their logits are
+    garbage-by-construction and the caller ignores them (their state is
+    frozen by the masked executor).  Returns ``((B, V) logits, new states)``.
+    """
+    x, new_states = _quant_stack(params, qlayers, tokens, states, backend,
+                                 valid_len)
+    idx = jnp.maximum(valid_len - 1, 0)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    logits = emb.logits_head(params, last.astype(jnp.bfloat16))
+    return logits, new_states
+
+
+def quant_chunk_advance(params, qlayers, cfg: ArchConfig, tokens, states,
+                        valid_len, backend: str = "xla"):
+    """Chunked-prefill advance: ragged stack over ``(B, K)``, state only.
+
+    For engine steps where NO slot finishes its prompt (and none is
+    generating), the next-token distribution is never read -- skip the LM
+    head entirely and return no logits, so consecutive prefill chunks can be
+    dispatched back-to-back without a per-step device->host sync.  The state
+    trajectory is identical to ``quant_chunk_step`` (the head reads state,
+    never writes it).
+    """
+    _, new_states = _quant_stack(params, qlayers, tokens, states, backend,
+                                 valid_len)
+    return new_states
 
 
 def quant_prefill(params, qlayers, cfg: ArchConfig, tokens, states,

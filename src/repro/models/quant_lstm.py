@@ -176,6 +176,7 @@ def quant_lstm_layer(
     c0_q: Optional[jax.Array] = None,
     *,
     backend: Optional[str] = None,
+    valid_len: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Integer layer over time.  xs_q: int8 (B, T, d_in) -> int8 (B, T, d_out).
 
@@ -186,8 +187,16 @@ def quant_lstm_layer(
     (TPU), or ``"interpret"`` (Pallas interpreter on CPU); all three are
     bit-exact with each other and with the per-gate reference executor
     (``quant_lstm_layer_ref``).
+
+    ``valid_len`` (int32 ``(B,)``) selects the ragged masked executor: row b
+    advances only for timesteps ``t < valid_len[b]`` and keeps its ``(h, c)``
+    frozen beyond that -- the chunked-prefill path of the serving engine.
     """
     h0_q, c0_q = _initial_state(spec, xs_q.shape[0], h0_q, c0_q)
+    if valid_len is not None:
+        return kops.quant_lstm_seq_masked(
+            arrays, spec, xs_q, h0_q, c0_q, valid_len, backend=backend
+        )
     return kops.quant_lstm_seq(
         arrays, spec, xs_q, h0_q, c0_q, backend=backend
     )

@@ -163,6 +163,23 @@ def engine_state_shardings(state_tree, rules, mesh) -> Any:
     return tree_shardings(specs, state_tree, rules, mesh)
 
 
+def engine_block_sharding(shape: Sequence[int], rules, mesh) -> NamedSharding:
+    """NamedSharding for a per-step engine input block: the slot dim leads.
+
+    Covers the ``(S,)`` token/active vectors of the one-token step and the
+    ``(S, K)`` token block + ``(S,)`` valid-length vector of the chunked
+    prefill step.  Dim 0 is the slot axis and spreads over the data-parallel
+    mesh axes -- the SAME placement ``engine_state_shardings`` gives the slot
+    state, so the jitted step sees consistently-sharded operands and never
+    needs a resharding collective on its inputs.  Falls back to replication
+    when the slot count does not divide the DP axes (``resolve``).
+    """
+    if rules is None:
+        rules = rules_for("tiny")
+    logical = ("batch",) + (None,) * (len(shape) - 1)
+    return NamedSharding(mesh, resolve(logical, shape, rules, mesh))
+
+
 def state_logical(state_tree) -> Any:
     """Decode cache/state logical specs, keyed on (leaf name, rank).
 

@@ -178,7 +178,9 @@ def test_trace_roundtrip(tmp_path, qlm):
 
 def test_engine_with_mesh_sharding_hook(qlm):
     """The batch-axis sharding hook (single-device mesh) must not change a
-    single emitted token."""
+    single emitted token -- including the chunked-prefill program, whose
+    (S, K) token block and (S,) valid vector go through
+    ``engine_block_sharding``."""
     from jax.sharding import Mesh
 
     from repro.runtime import sharding as shlib
@@ -188,15 +190,167 @@ def test_engine_with_mesh_sharding_hook(qlm):
     rules = shlib.rules_for(cfg.shard_profile)
     requests = E.synthetic_trace(4, cfg.vocab_size, seed=2,
                                  prompt_lens=(2, 4), gen_lens=(3,))
-    plain = E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=2)
+    plain = E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=2,
+                                       chunk=2)
     plain.submit_all(requests)
     sharded = E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=2,
-                                         mesh=mesh, rules=rules)
+                                         chunk=2, mesh=mesh, rules=rules)
     sharded.submit_all(list(requests))
     rp, _ = plain.run()
     rs, _ = sharded.run()
     assert {k: v.tokens for k, v in rp.items()} == \
         {k: v.tokens for k, v in rs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: bit-exactness, TTFT metrics, truncation bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def _run_engine(qlm, requests, *, chunk, n_slots=3, max_steps=None):
+    params, qlayers, cfg = qlm
+    eng = E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=n_slots,
+                                     chunk=chunk)
+    # fresh Request objects: engines mutate nothing, but keep inputs isolated
+    eng.submit_all([E.Request(rid=r.rid, prompt=r.prompt,
+                              max_new_tokens=r.max_new_tokens)
+                    for r in requests])
+    return eng.run(max_steps=max_steps)
+
+
+def test_chunked_prefill_bitexact(qlm):
+    """Chunk sizes 2 and 4 must emit bit-identical tokens to chunk=1 and to
+    decoding each stream alone -- prompts shorter than, equal to, and longer
+    than (and not divisible by) the chunk, plus a mid-generation co-tenant,
+    all advance correctly in shared steps."""
+    params, qlayers, cfg = qlm
+    rng = np.random.default_rng(13)
+    requests = [
+        E.Request(rid=i,
+                  prompt=rng.integers(0, cfg.vocab_size, size=(p,)),
+                  max_new_tokens=g)
+        for i, (p, g) in enumerate(
+            [(1, 3), (3, 2), (4, 2), (5, 4), (9, 2), (2, 3)])
+    ]
+    outs = {}
+    for k in (1, 2, 4):
+        results, stats = _run_engine(qlm, requests, chunk=k)
+        assert stats.chunk == k
+        outs[k] = {rid: r.tokens for rid, r in results.items()}
+    assert outs[1] == outs[2] == outs[4]
+    ref = _reference(params, qlayers, cfg, requests)
+    for r in requests:
+        assert outs[4][r.rid] == ref[r.rid], f"stream {r.rid} drifted"
+
+
+def test_chunked_prefill_cuts_ttft_on_prompt_heavy(qlm):
+    """Long prompts (>= 16 tokens): chunk=4 must finish prefill in ~P/4
+    steps, so total steps and mean TTFT-in-steps drop >= 2x vs chunk=1
+    (deterministic -- step counts don't depend on wall clock)."""
+    params, qlayers, cfg = qlm
+    rng = np.random.default_rng(5)
+    requests = [
+        E.Request(rid=i,
+                  prompt=rng.integers(0, cfg.vocab_size, size=(p,)),
+                  max_new_tokens=2)
+        for i, p in enumerate([16, 17, 16])
+    ]
+    _, s1 = _run_engine(qlm, requests, chunk=1)
+    _, s4 = _run_engine(qlm, requests, chunk=4)
+    assert s4.steps < s1.steps
+    assert s1.mean_ttft_steps >= 2 * s4.mean_ttft_steps
+    # K=1: TTFT in steps for an immediately-admitted stream is exactly its
+    # prompt length (one teacher-forced token per step, first generated
+    # token on the step that consumes the last prompt token)
+    assert s1.mean_ttft_steps == np.mean([16, 17, 16])
+
+
+def test_ttft_and_stream_rate_metrics(qlm):
+    """Request-level latency bookkeeping: an immediately-admitted stream's
+    ttft_steps equals its prompt length at chunk=1, wall-clock fields are
+    populated and positive, and stats aggregate them."""
+    params, qlayers, cfg = qlm
+    rng = np.random.default_rng(9)
+    requests = [
+        E.Request(rid=i,
+                  prompt=rng.integers(0, cfg.vocab_size, size=(p,)),
+                  max_new_tokens=3)
+        for i, p in enumerate([2, 4, 5])
+    ]
+    results, stats = _run_engine(qlm, requests, chunk=1)
+    for r in requests:
+        res = results[r.rid]
+        assert res.ttft_steps == r.prompt.size  # admitted at step 0
+        assert res.ttft_s is not None and res.ttft_s > 0
+        assert res.tokens_per_s is not None and res.tokens_per_s > 0
+    assert stats.mean_ttft_steps == np.mean([2, 4, 5])
+    assert stats.mean_ttft_s > 0
+    assert stats.mean_stream_tokens_per_s > 0
+
+
+def test_truncation_finished_step_matches_last_ran_step(qlm):
+    """max_steps regression: a truncated stream's finished_step must be the
+    step that actually ran last (stats.steps - 1), the same stamp a stream
+    evicted on that step would get -- not one past it."""
+    params, qlayers, cfg = qlm
+    rng = np.random.default_rng(3)
+    requests = [
+        E.Request(rid=i,
+                  prompt=rng.integers(0, cfg.vocab_size, size=(2,)),
+                  max_new_tokens=8)
+        for i in range(3)
+    ]
+    results, stats = _run_engine(qlm, requests, chunk=1, max_steps=4)
+    assert stats.steps == 4
+    assert results, "nothing truncated -- workload too short for the test"
+    for res in results.values():
+        assert res.truncated
+        assert res.finished_step == stats.steps - 1
+        # partial output: prompt of 2 consumed in 2 steps, tokens on steps
+        # 1..3 -> 3 generated of the 8 budgeted
+        assert len(res.tokens) == 3
+        assert res.ttft_steps == 2
+
+
+def test_request_and_engine_validation_raises(qlm):
+    """Invariants must raise ValueError (not assert, which python -O
+    strips): empty prompts, non-positive budgets, bad slot/chunk counts."""
+    params, qlayers, cfg = qlm
+    with pytest.raises(ValueError, match="empty prompt"):
+        E.Request(rid=0, prompt=np.zeros((0,), np.int32), max_new_tokens=1)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        E.Request(rid=0, prompt=np.array([1]), max_new_tokens=0)
+    with pytest.raises(ValueError, match="n_slots"):
+        E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=0)
+    with pytest.raises(ValueError, match="chunk"):
+        E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=1, chunk=0)
+
+
+def test_load_trace_validates_entries(tmp_path, qlm):
+    """Malformed trace entries fail loudly with the entry index, instead of
+    KeyError/empty-prompt crashes deep inside the engine."""
+    import json
+
+    _, _, cfg = qlm
+
+    def write(payload):
+        p = tmp_path / "bad.json"
+        p.write_text(json.dumps(payload))
+        return str(p)
+
+    cases = [
+        ({"not": "a list"}, "expected a JSON list"),
+        (["nope"], "entry 0"),
+        ([{"prompt_len": 4}], "missing 'gen'"),
+        ([{"prompt_len": 4, "gen": 0}], "'gen' must be >= 1"),
+        ([{"prompt": [], "gen": 2}], "'prompt' is empty"),
+        ([{"prompt_len": 0, "gen": 2}], "'prompt_len' must be >= 1"),
+        ([{"gen": 2}], "needs 'prompt' or 'prompt_len'"),
+        ([{"prompt_len": 2, "gen": 1}, {"gen": 1}], "entry 1"),
+    ]
+    for payload, match in cases:
+        with pytest.raises(ValueError, match=match):
+            E.load_trace(write(payload), cfg.vocab_size)
 
 
 # ---------------------------------------------------------------------------
@@ -240,3 +394,34 @@ if _HAVE_HYPOTHESIS:
             ref = E.decode_single(params, qlayers, cfg, r.prompt,
                                   r.max_new_tokens)
             assert results[r.rid].tokens == ref, f"stream {r.rid} drifted"
+
+    @settings(max_examples=5, deadline=None)
+    @given(workload=_WORKLOAD, chunk=st.integers(1, 8),
+           seed=st.integers(0, 2**16), order_seed=st.integers(0, 2**16))
+    def test_property_chunked_prefill_bitexact(qlm, workload, chunk, seed,
+                                               order_seed):
+        """For random chunk sizes K in {1..8}, workloads and admission
+        orders, the chunked engine's per-stream tokens are bit-identical to
+        the K=1 engine AND to decoding each stream alone (slots fixed at 3
+        so chunk programs compile once per distinct K)."""
+        params, qlayers, cfg = qlm
+        rng = np.random.default_rng(seed)
+        requests = [
+            E.Request(rid=i,
+                      prompt=rng.integers(0, cfg.vocab_size, size=(p,)),
+                      max_new_tokens=g)
+            for i, (p, g) in enumerate(workload)
+        ]
+        order = np.random.default_rng(order_seed).permutation(len(requests))
+        outs = {}
+        for k in sorted({1, chunk}):
+            eng = E.ContinuousBatchingEngine(params, qlayers, cfg,
+                                             n_slots=3, chunk=k)
+            eng.submit_all([requests[i] for i in order])
+            results, _ = eng.run()
+            outs[k] = {rid: res.tokens for rid, res in results.items()}
+        assert outs[1] == outs[chunk]
+        for r in requests:
+            ref = E.decode_single(params, qlayers, cfg, r.prompt,
+                                  r.max_new_tokens)
+            assert outs[chunk][r.rid] == ref, f"stream {r.rid} drifted"

@@ -177,3 +177,41 @@ def test_fused_layer_odd_batch():
     y_x, _ = QL.quant_lstm_layer(arrays, spec, xs_q, backend="xla")
     y_i, _ = QL.quant_lstm_layer(arrays, spec, xs_q, backend="interpret")
     np.testing.assert_array_equal(np.asarray(y_x), np.asarray(y_i))
+
+
+def test_masked_seq_executor_matches_prefix_feeding():
+    """Ragged masked executor (the chunked-prefill workhorse): each row's
+    final (h, c) after a (B, T) block with per-row valid lengths must be
+    bitwise the state from feeding ONLY that row's valid prefix through the
+    unmasked executor, and rows with valid_len == 0 must stay frozen."""
+    variant = L.LSTMVariant(use_layernorm=True, use_projection=True)
+    xs_q, arrays, spec = _setup(variant)  # (B=4, T=6)
+    valid = jnp.asarray([0, 1, 4, 6], jnp.int32)
+    h0 = jnp.full((B, D_P), spec.zp_h_out, jnp.int8)
+    c0 = jnp.zeros((B, D_H), jnp.int16)
+
+    ys_m, (h_m, c_m) = ops.quant_lstm_seq_masked(
+        arrays, spec, xs_q, h0, c0, valid, backend="xla")
+    ys_i, (h_i, c_i) = ops.quant_lstm_seq_masked(
+        arrays, spec, xs_q, h0, c0, valid, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(h_m), np.asarray(h_i))
+    np.testing.assert_array_equal(np.asarray(c_m), np.asarray(c_i))
+    np.testing.assert_array_equal(np.asarray(ys_m), np.asarray(ys_i))
+
+    for row, n in enumerate(np.asarray(valid)):
+        if n == 0:  # frozen: initial state untouched
+            np.testing.assert_array_equal(np.asarray(h_m)[row],
+                                          np.asarray(h0)[row])
+            np.testing.assert_array_equal(np.asarray(c_m)[row],
+                                          np.asarray(c0)[row])
+            continue
+        ys_r, (h_r, c_r) = ops.quant_lstm_seq(
+            arrays, spec, xs_q[row:row + 1, :n],
+            h0[row:row + 1], c0[row:row + 1], backend="xla")
+        np.testing.assert_array_equal(np.asarray(h_m)[row],
+                                      np.asarray(h_r)[0])
+        np.testing.assert_array_equal(np.asarray(c_m)[row],
+                                      np.asarray(c_r)[0])
+        # the output sequence over the valid prefix matches too
+        np.testing.assert_array_equal(np.asarray(ys_m)[row, :n],
+                                      np.asarray(ys_r)[0])

@@ -11,13 +11,14 @@ BACKEND ?= xla
 CHUNK ?= 1
 SERVE_BACKEND ?= xla
 
-.PHONY: check test collect bench engine-smoke engine-bench engine-ttft-bench
+.PHONY: check test collect bench prefill-bench prefill-bench-smoke \
+	engine-smoke engine-bench engine-ttft-bench
 
 collect:
 	$(PYTEST) -q --collect-only >/dev/null
 
 check: collect
-	timeout 2700 env PYTHONPATH=src REPRO_KERNEL_BACKEND=$(BACKEND) \
+	timeout 3600 env PYTHONPATH=src REPRO_KERNEL_BACKEND=$(BACKEND) \
 		$(PY) -m pytest -q -m fast
 
 test:
@@ -25,6 +26,19 @@ test:
 
 bench:
 	PYTHONPATH=src $(PY) benchmarks/speed.py
+
+# hoisted-GEMM vs per-step-scan prefill throughput with the >=1.5x hard
+# gate at the acceptance shape (B=8, T=64); writes BENCH_prefill.json
+prefill-bench:
+	PYTHONPATH=src $(PY) benchmarks/prefill_throughput.py \
+		--check-speedup 1.5
+
+# CI smoke: same gate machinery at a small (B, T) / relaxed bar so 2-core
+# runners finish fast; proves the gate path end-to-end on every push
+prefill-bench-smoke:
+	timeout 600 env PYTHONPATH=src $(PY) benchmarks/prefill_throughput.py \
+		--batch 4 --seq 32 --iters 5 \
+		--check-speedup 1.2 --out BENCH_prefill_smoke.json
 
 # end-to-end continuous-batching serve in under a minute (post-compile):
 # mixed prompt/gen lengths through 8 slots on the smoke LSTM LM.

@@ -10,12 +10,27 @@ Backends:
 Select globally via ``set_backend`` or per-call with ``backend=``.
 
 Besides the per-kernel wrappers this module hosts the **fused sequence-level
-integer LSTM executor** (``quant_lstm_step`` / ``quant_lstm_seq``): each
-timestep runs ONE packed ``(B, d_in) x (d_in, G*H)`` int8 MXU matmul plus one
-recurrent ``(B, d_out) x (d_out, G*H)`` matmul over the ``[i|f|z|o]``
-column-concatenated weights from ``core/recipe.py``, then feeds the fused
-``quant_lstm_cell`` elementwise kernel -- 2 ``dot_general`` calls per step
-instead of the reference executor's 8, with bit-identical integer results.
+integer LSTM executors**.  Since PR 4 they run in two stages:
+
+  1. **input-projection stage** (``quant_lstm_input_proj``): the whole
+     sequence's input product ``reshape(xs_q, (B*T, d_in)) @ W_cat +
+     fold_x_cat`` as ONE time-batched int8 MXU GEMM -- it does not depend on
+     the scan carry, and integer arithmetic makes hoisting it out of the
+     recurrent loop bit-exact by construction;
+  2. **recurrent stage** (``quant_lstm_recurrent_step``): per timestep, one
+     packed ``(B, d_out) x (d_out, G*H)`` recurrent matmul over the
+     ``[i|f|z|o]`` column-concatenated weights from ``core/recipe.py`` plus
+     the fused ``quant_lstm_cell`` elementwise update, consuming the
+     per-step ``(B, G*H)`` int32 slice of the hoisted accumulator.
+
+``quant_lstm_seq`` / ``quant_lstm_seq_masked`` lower the recurrent stage as
+a ``lax.scan`` on the ``xla`` backend and as the **persistent Pallas
+sequence kernel** (``kernels/quant_lstm_scan.py``: one ``pallas_call``
+looping over T with ``(h, c)`` resident in VMEM scratch) on ``pallas`` /
+``pallas_interpret``.  ``quant_lstm_seq_stepwise`` keeps the pre-hoist
+executor (input GEMM inside the scan body) as the baseline that tests and
+``benchmarks/prefill_throughput.py`` compare against -- all paths are
+bit-identical.
 """
 from __future__ import annotations
 
@@ -31,6 +46,7 @@ from . import ref
 from .int8_matmul import int8_matmul_pallas
 from .int_layernorm import int_layernorm_pallas
 from .quant_lstm_cell import quant_lstm_cell_pallas
+from .quant_lstm_scan import quant_lstm_seq_scan_pallas
 
 _BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "xla")
 _VALID = ("xla", "pallas", "pallas_interpret")
@@ -38,9 +54,15 @@ _ALIAS = {"interpret": "pallas_interpret"}
 
 
 def set_backend(name: str) -> None:
+    """Select the global kernel backend (``interpret`` aliases
+    ``pallas_interpret``).  Raises ``ValueError`` on unknown names -- a
+    plain raise, not ``assert``, so the check survives ``python -O``."""
     global _BACKEND
     name = _ALIAS.get(name, name)
-    assert name in _VALID, name
+    if name not in _VALID:
+        raise ValueError(
+            f"unknown kernel backend {name!r}: valid backends are "
+            f"{_VALID} (alias 'interpret' -> 'pallas_interpret')")
     _BACKEND = name
 
 
@@ -51,7 +73,10 @@ def get_backend() -> str:
 def _resolve(backend: Optional[str]) -> str:
     b = backend or _BACKEND
     b = _ALIAS.get(b, b)
-    assert b in _VALID, b
+    if b not in _VALID:
+        raise ValueError(
+            f"unknown kernel backend {b!r}: valid backends are "
+            f"{_VALID} (alias 'interpret' -> 'pallas_interpret')")
     return b
 
 
@@ -123,8 +148,69 @@ def int_layernorm(
 
 
 # ---------------------------------------------------------------------------
-# Fused sequence-level integer LSTM executor (packed [i|f|z|o] matmuls)
+# Fused sequence-level integer LSTM executor (packed [i|f|z|o] matmuls),
+# two-stage since PR 4: hoisted time-batched input GEMM -> recurrent scan.
 # ---------------------------------------------------------------------------
+
+
+def _empty_seq(xs_q, h0_q, c0_q):
+    """T == 0 result: no outputs, initial carry (a grid=(0,) pallas_call
+    would never write its final-state blocks, so short-circuit uniformly)."""
+    B = xs_q.shape[0]
+    ys = jnp.zeros((B, 0, h0_q.shape[-1]), h0_q.dtype)
+    return ys, (h0_q, c0_q)
+
+
+def quant_lstm_input_proj(
+    arrays: Dict[str, Any],
+    xs_q: jax.Array,  # int8 (B, T, d_in)
+) -> jax.Array:
+    """Hoisted input-projection stage: the whole sequence's packed input
+    accumulator ``reshape(xs_q, (B*T, d_in)) @ W_cat + fold_x_cat`` as ONE
+    int8 MXU GEMM -> int32 ``(B, T, G*H)``.
+
+    ``x_t @ W_cat`` is carry-independent, and integer accumulation is exact
+    under any batching, so slicing step t of this tensor is bit-identical to
+    the per-step matmul the pre-hoist executor ran inside the scan -- while
+    raising the GEMM's arithmetic intensity from one ``(B, d_in)`` row-block
+    per dispatch to the full ``(B*T, d_in)`` sequence.
+    """
+    B, T, d_in = xs_q.shape
+    GH = arrays["W_cat"].shape[1]  # explicit: reshape(-1) rejects T == 0
+    acc = iops.matmul_i8_i32(
+        xs_q.reshape(B * T, d_in), arrays["W_cat"]
+    ) + arrays["fold_x_cat"]
+    return acc.reshape(B, T, GH)
+
+
+def quant_lstm_recurrent_step(
+    arrays: Dict[str, Any],
+    spec,  # core.recipe.QLSTMSpec (static)
+    acc_x_t: jax.Array,  # int32 (B, G*H): step slice of the hoisted GEMM
+    h_q: jax.Array,  # int8 (B, d_out)
+    c_q: jax.Array,  # int16 (B, H)
+    *,
+    backend: Optional[str] = None,
+    **block_kw,
+) -> Tuple[jax.Array, jax.Array]:
+    """Recurrent stage of one timestep: packed recurrent matmul + gate
+    rescales + fused cell (+ projection), consuming the precomputed input
+    accumulator slice.  Returns (h_new int8, c_new int16).
+
+    Bit-exact with the reference per-gate executor in
+    ``repro.models.quant_lstm`` (slicing column block g of the packed int32
+    product is the per-gate matmul; every rescale runs in the same order).
+    """
+    b = _resolve(backend)
+    acc_h = iops.matmul_i8_i32(h_q, arrays["R_cat"]) + arrays["fold_hb_cat"]
+    i16, f16, z16, o_in, o_kw = ref.lstm_gate_preacts(
+        arrays, spec, acc_x_t, acc_h, c_q)
+    m_q, c_new = quant_lstm_cell(
+        i16, f16, z16, o_in, c_q,
+        cell_int_bits=spec.cell_int_bits, cifg=spec.use_cifg,
+        eff_m=spec.eff_m, zp_m=spec.zp_m, backend=b, **o_kw, **block_kw,
+    )
+    return ref.lstm_project_jnp(arrays, spec, m_q), c_new
 
 
 def quant_lstm_step(
@@ -139,69 +225,12 @@ def quant_lstm_step(
 ) -> Tuple[jax.Array, jax.Array]:
     """One fused integer LSTM timestep: 2 packed matmuls + fused cell.
 
-    Bit-exact with the reference per-gate executor in
-    ``repro.models.quant_lstm`` (slicing column block g of the packed int32
-    product is the per-gate matmul; every rescale runs in the same order).
-    Returns (h_new int8, c_new int16).
+    The single-token (decode) entry point: input-projection and recurrent
+    stages run back to back on one ``(B, d_in)`` token block.
     """
-    b = _resolve(backend)
-    gates = spec.variant.gates  # [i|f|z|o] order; CIFG drops "i"
-    H = spec.cfg_d_hidden
     acc_x = iops.matmul_i8_i32(x_q, arrays["W_cat"]) + arrays["fold_x_cat"]
-    acc_h = iops.matmul_i8_i32(h_q, arrays["R_cat"]) + arrays["fold_hb_cat"]
-
-    g16: Dict[str, jax.Array] = {}
-    o_kw: Dict[str, Any] = {}
-    o_in = None
-    for k, g in enumerate(gates):
-        gs = spec.gate_spec(g)
-        gate = fp.saturating_add_i32(
-            fp.multiply_by_quantized_multiplier(
-                acc_x[..., k * H:(k + 1) * H], *gs.eff_x
-            ),
-            fp.multiply_by_quantized_multiplier(
-                acc_h[..., k * H:(k + 1) * H], *gs.eff_h
-            ),
-        )
-        if g == "o" and spec.use_peephole:
-            # eq 5: the o peephole reads c_new, which only exists inside the
-            # fused cell -- hand over the int32 accumulator (+ LN params).
-            o_in = gate
-            o_kw = dict(p_o=arrays["P"]["o"], eff_c_o=gs.eff_c)
-            if spec.use_layernorm:
-                o_kw.update(
-                    lw_o=arrays["L"]["o"], lb_o=arrays["Lb"]["o"],
-                    ln_out_o=gs.ln_out,
-                )
-            continue
-        if gs.eff_c is not None:  # i/f peephole on the previous cell state
-            acc_c = iops.matmul_i16_elementwise(arrays["P"][g], c_q)
-            gate = fp.saturating_add_i32(
-                gate, fp.multiply_by_quantized_multiplier(acc_c, *gs.eff_c)
-            )
-        gate16 = fp.saturate_i16(gate)
-        if spec.use_layernorm:
-            gate16 = iops.integer_layernorm(
-                gate16, arrays["L"][g], arrays["Lb"][g],
-                gs.ln_out[0], gs.ln_out[1],
-            )
-        g16[g] = gate16
-    if o_in is None:
-        o_in = g16["o"]
-    i16 = g16.get("i", g16["f"])  # placeholder when CIFG (kernel ignores it)
-
-    m_q, c_new = quant_lstm_cell(
-        i16, g16["f"], g16["z"], o_in, c_q,
-        cell_int_bits=spec.cell_int_bits, cifg=spec.use_cifg,
-        eff_m=spec.eff_m, zp_m=spec.zp_m, backend=b, **o_kw, **block_kw,
-    )
-    if spec.use_projection:
-        acc = iops.matmul_i8_i32(m_q, arrays["W_proj"]) + arrays["fold_proj"]
-        h_new = fp.multiply_by_quantized_multiplier(acc, *spec.eff_proj)
-        h_new = fp.saturate_i8(h_new + jnp.int32(spec.zp_h_out))
-    else:
-        h_new = m_q
-    return h_new, c_new
+    return quant_lstm_recurrent_step(
+        arrays, spec, acc_x, h_q, c_q, backend=backend, **block_kw)
 
 
 def quant_lstm_seq(
@@ -214,7 +243,55 @@ def quant_lstm_seq(
     backend: Optional[str] = None,
     **block_kw,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """Scan ``quant_lstm_step`` over time: int8 (B, T, d_in) -> (B, T, d_out)."""
+    """Hoisted sequence executor: int8 (B, T, d_in) -> (B, T, d_out).
+
+    Stage 1 runs the whole sequence's input GEMM once
+    (``quant_lstm_input_proj``); stage 2 consumes per-step ``(B, G*H)``
+    slices -- as a ``lax.scan`` of ``quant_lstm_recurrent_step`` on the
+    ``xla`` backend, or as the persistent Pallas sequence kernel (one
+    ``pallas_call`` looping over T with ``(h, c)`` in VMEM scratch) on
+    ``pallas`` / ``pallas_interpret``.  All lowerings are bit-identical to
+    ``quant_lstm_seq_stepwise`` (``block_kw`` only reaches the per-step
+    cell kernel on that path; the sequence kernel ignores it).
+    """
+    b = _resolve(backend)
+    if xs_q.shape[1] == 0:  # empty sequence: carry unchanged, like the scan
+        return _empty_seq(xs_q, h0_q, c0_q)
+    acc_x_all = quant_lstm_input_proj(arrays, xs_q)
+    if b != "xla":
+        return quant_lstm_seq_scan_pallas(
+            arrays, spec, acc_x_all, h0_q, c0_q,
+            interpret=(b == "pallas_interpret"))
+
+    def step(carry, acc_t):
+        h, c = carry
+        h, c = quant_lstm_recurrent_step(
+            arrays, spec, acc_t, h, c, backend=b, **block_kw
+        )
+        return (h, c), h
+
+    (h, c), ys = jax.lax.scan(
+        step, (h0_q, c0_q), jnp.swapaxes(acc_x_all, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), (h, c)
+
+
+def quant_lstm_seq_stepwise(
+    arrays: Dict[str, Any],
+    spec,
+    xs_q: jax.Array,  # int8 (B, T, d_in)
+    h0_q: jax.Array,
+    c0_q: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    **block_kw,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Pre-hoist executor: scan ``quant_lstm_step`` with the input GEMM
+    inside the scan body (one small ``(B, d_in)`` matmul per step).
+
+    Kept as the baseline the hoisted executors are tested bit-exact against
+    and benchmarked over (``benchmarks/prefill_throughput.py``); not on any
+    serving path.
+    """
     b = _resolve(backend)
 
     def step(carry, x_t):
@@ -243,22 +320,32 @@ def quant_lstm_seq_masked(
 
     The chunked-prefill workhorse: a ``(B, K)`` token block where every row
     owns a different number of real tokens (a slot mid-generation feeds 1, a
-    slot with 3 prompt tokens left feeds 3, an empty slot feeds 0).  Each
-    timestep runs the same ``quant_lstm_step`` as the unmasked scan and then
+    slot with 3 prompt tokens left feeds 3, an empty slot feeds 0).  The
+    input GEMM is hoisted exactly as in ``quant_lstm_seq`` (dead positions
+    burn GEMM flops on stale inputs, but their results are discarded, which
+    is what keeps the program shape static); each recurrent step then
     freezes ``(h, c)`` for rows already past their valid length, so a row's
     state trajectory is **bitwise identical** to feeding its valid prefix one
     token at a time -- rows are computed independently (per-row matmuls, LN
     reduces over hidden only) and ``where`` with a true mask returns the new
-    value unchanged.  Frozen rows burn compute on stale inputs but their
-    results are discarded, which is what keeps the program shape static.
+    value unchanged.  As in ``quant_lstm_seq``, ``block_kw`` only reaches
+    the per-step cell kernel on the ``xla`` scan path; the sequence kernel
+    ignores it.
     """
     b = _resolve(backend)
+    if xs_q.shape[1] == 0:  # empty sequence: carry unchanged, like the scan
+        return _empty_seq(xs_q, h0_q, c0_q)
+    acc_x_all = quant_lstm_input_proj(arrays, xs_q)
+    if b != "xla":
+        return quant_lstm_seq_scan_pallas(
+            arrays, spec, acc_x_all, h0_q, c0_q, valid_len,
+            interpret=(b == "pallas_interpret"))
 
     def step(carry, inp):
         h, c = carry
-        x_t, t = inp
-        h_new, c_new = quant_lstm_step(
-            arrays, spec, x_t, h, c, backend=b, **block_kw
+        acc_t, t = inp
+        h_new, c_new = quant_lstm_recurrent_step(
+            arrays, spec, acc_t, h, c, backend=b, **block_kw
         )
         live = (t < valid_len)[:, None]
         h = jnp.where(live, h_new, h)
@@ -268,5 +355,5 @@ def quant_lstm_seq_masked(
     T = xs_q.shape[1]
     ts = jnp.arange(T, dtype=valid_len.dtype)
     (h, c), ys = jax.lax.scan(
-        step, (h0_q, c0_q), (jnp.swapaxes(xs_q, 0, 1), ts))
+        step, (h0_q, c0_q), (jnp.swapaxes(acc_x_all, 0, 1), ts))
     return jnp.swapaxes(ys, 0, 1), (h, c)

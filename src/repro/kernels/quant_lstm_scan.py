@@ -1,0 +1,169 @@
+"""Persistent Pallas sequence kernel: the integer LSTM recurrent stage.
+
+One ``pallas_call`` runs the ENTIRE sequence: the grid is ``(T,)`` (TPU grid
+iteration is sequential), the packed recurrent weights / peephole / LN /
+projection parameters are mapped to constant-index blocks so they stay
+resident in VMEM across steps, and the ``(h, c)`` carry lives in VMEM
+scratch for the whole sweep.  Each grid step fuses
+
+    recurrent matmul (int8 MXU)  ->  per-gate fixed-point rescales
+    [-> integer LayerNorm / peephole]  ->  fused cell update
+    [-> projection matmul]  ->  write ys[t], update the carry
+
+which eliminates the per-timestep dispatch overhead and the per-step h/c
+HBM round-trips the scan-of-steps executor pays: between consecutive
+timesteps nothing leaves VMEM.  The input-dependent work arrives
+precomputed -- the kernel consumes per-step ``(B, 1, G*H)`` int32 blocks of
+the hoisted time-batched input GEMM (``ops.quant_lstm_input_proj``), so the
+only matmul on the critical scan path is the genuinely sequential
+``h_{t-1} @ R_cat`` product.
+
+The step math is ``ref.quant_lstm_recurrent_jnp`` -- the same function the
+``xla`` scan executor runs -- traced inside the kernel body, so the two
+lowerings are bit-identical by construction (integer ops only; validated
+against the goldens and the per-gate reference for all 16 variants).
+
+The masked variant takes a per-row ``valid_len`` and freezes ``(h, c)`` for
+rows past their valid prefix -- the chunked-prefill contract of
+``ops.quant_lstm_seq_masked``.
+
+Sizing note: blocks span the full ``(B, ...)`` extents (integer LayerNorm
+reduces over the whole hidden axis, and the carry must stay resident), so
+``B * (G*H)`` int32 plus the packed weights must fit in VMEM; serving-shape
+blocks (B <= 64, H <= 2048) do.  Time is the grid, so T is unbounded.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+
+def _peephole_gates(spec) -> Tuple[str, ...]:
+    # recipe.py quantizes P only for non-z gates (CIFG already dropped "i")
+    return tuple(g for g in spec.variant.gates if g != "z")
+
+
+def _scan_kernel(*refs, spec, masked: bool):
+    it = iter(refs)
+    acc_ref = next(it)  # (B, 1, G*H) int32: step slice of the hoisted GEMM
+    r_ref = next(it)  # (d_out, G*H) int8, VMEM-resident all sweep
+    fhb_ref = next(it)  # (G*H,) int32
+    h0_ref = next(it)  # (B, d_out) int8
+    c0_ref = next(it)  # (B, H) int16
+    vals: Dict[str, Any] = {}
+    if spec.use_peephole:
+        vals["P"] = {g: next(it)[...] for g in _peephole_gates(spec)}
+    if spec.use_layernorm:
+        vals["L"] = {g: next(it)[...] for g in spec.variant.gates}
+        vals["Lb"] = {g: next(it)[...] for g in spec.variant.gates}
+    if spec.use_projection:
+        vals["W_proj"] = next(it)[...]
+        vals["fold_proj"] = next(it)[...]
+    vl_ref = next(it) if masked else None
+    ys_ref, h_out_ref, c_out_ref = next(it), next(it), next(it)
+    h_scr, c_scr = next(it), next(it)  # VMEM carry, persistent across steps
+
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _seed_carry():
+        h_scr[...] = h0_ref[...]
+        c_scr[...] = c0_ref[...]
+
+    h = h_scr[...]
+    c = c_scr[...]
+    vals["R_cat"] = r_ref[...]
+    vals["fold_hb_cat"] = fhb_ref[...]
+    h_new, c_new = ref.quant_lstm_recurrent_jnp(
+        vals, spec, acc_ref[...][:, 0, :], h, c)
+    if masked:
+        live = (vl_ref[...] > t)[:, None]
+        h_new = jnp.where(live, h_new, h)
+        c_new = jnp.where(live, c_new, c)
+    ys_ref[...] = h_new[:, None, :]
+    h_scr[...] = h_new
+    c_scr[...] = c_new
+
+    @pl.when(t == pl.num_programs(0) - 1)
+    def _emit_final_state():
+        h_out_ref[...] = h_new
+        c_out_ref[...] = c_new
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def quant_lstm_seq_scan_pallas(
+    arrays: Dict[str, Any],
+    spec,  # core.recipe.QLSTMSpec (static)
+    acc_x_all: jax.Array,  # int32 (B, T, G*H): hoisted input accumulator
+    h0_q: jax.Array,  # int8 (B, d_out)
+    c0_q: jax.Array,  # int16 (B, H)
+    valid_len: Optional[jax.Array] = None,  # int32 (B,): masked variant
+    *,
+    interpret: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Run the recurrent stage for a whole sequence in ONE kernel launch.
+
+    Returns ``(ys int8 (B, T, d_out), (h_final, c_final))`` -- bit-identical
+    to scanning ``ops.quant_lstm_recurrent_step`` over the same slices.
+    """
+    B, T, GH = acc_x_all.shape
+    H = spec.cfg_d_hidden
+    d_out = spec.cfg_d_proj if spec.use_projection else H
+    masked = valid_len is not None
+
+    def const(shape):
+        """Whole-array block revisited every grid step (stays in VMEM)."""
+        return pl.BlockSpec(shape, lambda t, _n=len(shape): (0,) * _n)
+
+    inputs = [acc_x_all, arrays["R_cat"], arrays["fold_hb_cat"], h0_q, c0_q]
+    in_specs = [
+        pl.BlockSpec((B, 1, GH), lambda t: (0, t, 0)),
+        const(arrays["R_cat"].shape),
+        const((GH,)),
+        const((B, d_out)),
+        const((B, H)),
+    ]
+    if spec.use_peephole:
+        for g in _peephole_gates(spec):
+            inputs.append(arrays["P"][g])
+            in_specs.append(const((H,)))
+    if spec.use_layernorm:
+        for key in ("L", "Lb"):
+            for g in spec.variant.gates:
+                inputs.append(arrays[key][g])
+                in_specs.append(const((H,)))
+    if spec.use_projection:
+        inputs += [arrays["W_proj"], arrays["fold_proj"]]
+        in_specs += [const(arrays["W_proj"].shape), const((d_out,))]
+    if masked:
+        inputs.append(valid_len)
+        in_specs.append(const((B,)))
+
+    ys, h, c = pl.pallas_call(
+        functools.partial(_scan_kernel, spec=spec, masked=masked),
+        grid=(T,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((B, 1, d_out), lambda t: (0, t, 0)),
+            const((B, d_out)),
+            const((B, H)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, d_out), jnp.int8),
+            jax.ShapeDtypeStruct((B, d_out), jnp.int8),
+            jax.ShapeDtypeStruct((B, H), jnp.int16),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, d_out), jnp.int8),
+            pltpu.VMEM((B, H), jnp.int16),
+        ],
+        interpret=interpret,
+    )(*inputs)
+    return ys, (h, c)

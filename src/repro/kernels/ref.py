@@ -79,6 +79,95 @@ def int_layernorm_jnp(q, lw, lb, out_m0, out_shift):
     return iops.integer_layernorm(q, lw, lb, out_m0, out_shift)
 
 
+# --- recurrent stage of the hoisted-GEMM LSTM executors --------------------
+
+
+def lstm_gate_preacts(vals, spec, acc_x, acc_h, c_q):
+    """Per-step gate pre-activations from the packed int32 accumulators.
+
+    ``acc_x`` is gate column block ``g`` of the (possibly hoisted) input
+    product ``x_q @ W_cat + fold_x_cat``; ``acc_h`` the recurrent product.
+    Every rescale runs in the reference order (mbqm(x) sat+ mbqm(h)
+    [sat+ mbqm(P (.) c)] -> sat16 -> LN), so slicing a time-batched
+    ``acc_x`` is bit-identical to computing it per step.
+
+    Returns ``(i16, f16, z16, o_in, o_kw)`` ready for the fused cell --
+    with a peephole, ``o_in`` is the int32 pre-peephole o accumulator and
+    ``o_kw`` carries the in-cell finisher params (see
+    ``kernels/quant_lstm_cell.py``).
+    """
+    H = spec.cfg_d_hidden
+    g16 = {}
+    o_kw = {}
+    o_in = None
+    for k, g in enumerate(spec.variant.gates):
+        gs = spec.gate_spec(g)
+        gate = fp.saturating_add_i32(
+            fp.multiply_by_quantized_multiplier(
+                acc_x[..., k * H:(k + 1) * H], *gs.eff_x
+            ),
+            fp.multiply_by_quantized_multiplier(
+                acc_h[..., k * H:(k + 1) * H], *gs.eff_h
+            ),
+        )
+        if g == "o" and spec.use_peephole:
+            # eq 5: the o peephole reads c_new, which only exists inside the
+            # fused cell -- hand over the int32 accumulator (+ LN params).
+            o_in = gate
+            o_kw = dict(p_o=vals["P"]["o"], eff_c_o=gs.eff_c)
+            if spec.use_layernorm:
+                o_kw.update(
+                    lw_o=vals["L"]["o"], lb_o=vals["Lb"]["o"],
+                    ln_out_o=gs.ln_out,
+                )
+            continue
+        if gs.eff_c is not None:  # i/f peephole on the previous cell state
+            acc_c = iops.matmul_i16_elementwise(vals["P"][g], c_q)
+            gate = fp.saturating_add_i32(
+                gate, fp.multiply_by_quantized_multiplier(acc_c, *gs.eff_c)
+            )
+        gate16 = fp.saturate_i16(gate)
+        if spec.use_layernorm:
+            gate16 = iops.integer_layernorm(
+                gate16, vals["L"][g], vals["Lb"][g],
+                gs.ln_out[0], gs.ln_out[1],
+            )
+        g16[g] = gate16
+    if o_in is None:
+        o_in = g16["o"]
+    i16 = g16.get("i", g16["f"])  # placeholder when CIFG (cell ignores it)
+    return i16, g16["f"], g16["z"], o_in, o_kw
+
+
+def lstm_project_jnp(vals, spec, m_q):
+    """Optional projection: int8 hidden ``m`` -> int8 output ``h``."""
+    if not spec.use_projection:
+        return m_q
+    acc = iops.matmul_i8_i32(m_q, vals["W_proj"]) + vals["fold_proj"]
+    h_new = fp.multiply_by_quantized_multiplier(acc, *spec.eff_proj)
+    return fp.saturate_i8(h_new + jnp.int32(spec.zp_h_out))
+
+
+def quant_lstm_recurrent_jnp(vals, spec, acc_x_t, h_q, c_q):
+    """Pure-jnp recurrent stage: one timestep given the precomputed input
+    accumulator slice.  This is what the persistent Pallas sequence kernel
+    (``kernels/quant_lstm_scan.py``) traces inside its body; the ``xla``
+    scan body (``ops.quant_lstm_recurrent_step``) shares the same
+    ``lstm_gate_preacts`` / ``lstm_project_jnp`` helpers and differs only
+    in dispatching the cell fusion through the backend layer, so the two
+    lowerings share every gate/projection definition.
+    """
+    acc_h = iops.matmul_i8_i32(h_q, vals["R_cat"]) + vals["fold_hb_cat"]
+    i16, f16, z16, o_in, o_kw = lstm_gate_preacts(
+        vals, spec, acc_x_t, acc_h, c_q)
+    m_q, c_new = quant_lstm_cell_jnp(
+        i16, f16, z16, o_in, c_q,
+        cell_int_bits=spec.cell_int_bits, cifg=spec.use_cifg,
+        eff_m=spec.eff_m, zp_m=spec.zp_m, **o_kw,
+    )
+    return lstm_project_jnp(vals, spec, m_q), c_new
+
+
 def _mbqm_np(x: np.ndarray, m0: int, shift: int) -> np.ndarray:
     """numpy int64 MultiplyByQuantizedMultiplier (gemmlowp semantics)."""
     x = x.astype(np.int64)

@@ -17,7 +17,10 @@ here: a fixed ``(B_slots, H)`` decode batch where
     slot up to K prompt tokens per step as an ``(S, K)`` block with per-slot
     valid lengths (the masked ragged executor freezes each row's state past
     its valid prefix), cutting time-to-first-token for long prompts ~K-fold
-    while staying bit-exact,
+    while staying bit-exact; since PR 4 the block's input GEMM is hoisted
+    out of the recurrent scan (one time-batched ``(S*K, d_in)`` packed
+    matmul per layer), so wider chunks also raise arithmetic intensity
+    instead of just amortizing dispatches,
   * finished streams are **evicted mid-flight** and their slot is re-used
     by the next pending request on the following step,
   * ONE jitted fused decode step (PR 1's packed ``[i|f|z|o]`` executor, any

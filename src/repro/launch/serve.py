@@ -122,7 +122,14 @@ def _serve_engine(args, cfg) -> None:
 
 
 def _serve_int8_lstm(args, cfg) -> None:
-    """Integer-only serving of the stacked LSTM LM (paper sec 3.2 path)."""
+    """Integer-only serving of the stacked LSTM LM (paper sec 3.2 path).
+
+    The scanned prefill runs the hoisted two-stage executor: per layer, the
+    whole prompt's packed input GEMM is one time-batched int8 matmul and
+    only the recurrent stage scans over time (as the persistent Pallas
+    sequence kernel under ``--backend pallas|interpret``), so prompt
+    tokens/s no longer pays a per-token input matmul dispatch.
+    """
     from repro.models import lstm_lm
 
     params, qlayers = _quantized_lstm_lm(args, cfg)

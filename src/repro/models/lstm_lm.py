@@ -214,9 +214,11 @@ def _quant_stack(params, qlayers, tokens, states, backend, valid_len=None):
     """Run the integer LSTM stack over a ``(B, T)`` token block.
 
     Each layer quantizes its float input with its own calibrated (s_x, zp_x),
-    runs the fused integer executor (``backend`` = xla | pallas | interpret),
-    and dequantizes for the next layer.  Returns the float stack output
-    ``(B, T, d_proj)`` plus the new per-layer states.
+    runs the hoisted two-stage integer executor (``backend`` = xla | pallas |
+    interpret) -- the layer's whole ``(B, T)`` input block goes through one
+    time-batched packed GEMM before the recurrent scan / persistent Pallas
+    sequence kernel -- and dequantizes for the next layer.  Returns the
+    float stack output ``(B, T, d_proj)`` plus the new per-layer states.
 
     ``valid_len`` (int32 ``(B,)``) selects the ragged masked executor: row b
     consumes only its first ``valid_len[b]`` tokens and freezes its

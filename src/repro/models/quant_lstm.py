@@ -180,13 +180,16 @@ def quant_lstm_layer(
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Integer layer over time.  xs_q: int8 (B, T, d_in) -> int8 (B, T, d_out).
 
-    Dispatches through the fused sequence executor in ``repro.kernels.ops``:
-    each timestep runs one packed ``[i|f|z|o]`` input matmul plus one packed
-    recurrent matmul feeding the fused cell update.  ``backend`` selects how
-    the elementwise cell fusion lowers -- ``"xla"`` (default), ``"pallas"``
-    (TPU), or ``"interpret"`` (Pallas interpreter on CPU); all three are
-    bit-exact with each other and with the per-gate reference executor
-    (``quant_lstm_layer_ref``).
+    Dispatches through the two-stage hoisted sequence executor in
+    ``repro.kernels.ops``: the whole sequence's packed ``[i|f|z|o]`` input
+    product runs as ONE time-batched int8 GEMM outside the recurrent loop,
+    and the scan consumes per-step int32 slices, leaving only the recurrent
+    matmul + fused cell update on the sequential path.  ``backend`` selects
+    how the recurrent stage lowers -- ``"xla"`` (default: ``lax.scan``),
+    ``"pallas"`` (TPU: the persistent sequence kernel, one launch per layer
+    with the carry in VMEM scratch), or ``"interpret"`` (the same kernel on
+    the Pallas interpreter, CPU); all three are bit-exact with each other
+    and with the per-gate reference executor (``quant_lstm_layer_ref``).
 
     ``valid_len`` (int32 ``(B,)``) selects the ragged masked executor: row b
     advances only for timesteps ``t < valid_len[b]`` and keeps its ``(h, c)``

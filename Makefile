@@ -10,9 +10,16 @@ BACKEND ?= xla
 # (serve.py takes "interpret" for the pallas_interpret kernel backend)
 CHUNK ?= 1
 SERVE_BACKEND ?= xla
+# speculative-decode knobs: draft budget (SPEC=0 runs the greedy baseline
+# leg, which skips the accept gate), gate bars (TTFT_BAR lets CI relax the
+# chunked-prefill TTFT gate for noisy 2-core runners)
+SPEC ?= 4
+SPEC_GATE ?= 1.3
+TTFT_BAR ?= 2.0
 
 .PHONY: check test collect bench prefill-bench prefill-bench-smoke \
-	engine-smoke engine-bench engine-ttft-bench
+	engine-smoke engine-bench engine-ttft-bench spec-bench \
+	spec-bench-smoke
 
 collect:
 	$(PYTEST) -q --collect-only >/dev/null
@@ -55,8 +62,29 @@ engine-bench:
 	PYTHONPATH=src $(PY) benchmarks/engine_throughput.py \
 		--slots 8 --requests 24 --chunk $(CHUNK) --check-speedup 2.0
 
-# chunked prefill on a prompt-heavy trace: mean TTFT must drop >= 2x
+# chunked prefill on a prompt-heavy trace: mean TTFT must drop >= TTFT_BAR
+# (default 2x; CI passes a relaxed bar -- wall-clock TTFT on shared 2-core
+# runners is noisy, and the deterministic step-count 2x gate lives in
+# tests/test_engine.py)
 engine-ttft-bench:
-	PYTHONPATH=src $(PY) benchmarks/engine_throughput.py \
+	timeout 1200 env PYTHONPATH=src $(PY) benchmarks/engine_throughput.py \
 		--slots 8 --requests 12 --prompt-heavy --chunk 4 \
-		--check-ttft-speedup 2.0
+		--check-ttft-speedup $(TTFT_BAR)
+
+# speculative decoding vs greedy on a repetitive-text trace: bit-exact per
+# stream AND >= SPEC_GATE accepted tokens per verify slot-step (the gate is
+# step-count based, so it is deterministic and CI-safe); writes
+# BENCH_spec.json
+spec-bench:
+	PYTHONPATH=src $(PY) benchmarks/spec_decode.py \
+		--speculate $(SPEC) \
+		$(if $(filter-out 0,$(SPEC)),--check-accept $(SPEC_GATE))
+
+# CI smoke: same machinery with a matrix-selectable backend and draft
+# budget; SPEC=0 runs the greedy baseline leg (bit-exactness vs
+# decode_single still enforced, accept gate skipped -- it needs drafts)
+spec-bench-smoke:
+	timeout 1500 env PYTHONPATH=src $(PY) benchmarks/spec_decode.py \
+		--backend $(SERVE_BACKEND) --speculate $(SPEC) \
+		$(if $(filter-out 0,$(SPEC)),--check-accept $(SPEC_GATE)) \
+		--out BENCH_spec_smoke.json

@@ -25,7 +25,19 @@ here: a fixed ``(B_slots, H)`` decode batch where
     by the next pending request on the following step,
   * ONE jitted fused decode step (PR 1's packed ``[i|f|z|o]`` executor, any
     ``backend=`` xla | pallas | interpret) advances all slots per iteration,
-    with an **active-mask** freezing the state of empty slots.
+    with an **active-mask** freezing the state of empty slots,
+  * with ``speculate=k > 0``, generation itself goes multi-token: a cheap
+    per-slot drafter (``launch/spec_decode.py``, default: an n-gram suffix
+    cache over the stream's own tokens) proposes up to k continuation
+    tokens, and a third jitted program -- the **masked-chunk verify step**
+    (``lstm_lm.quant_verify_step``) -- feeds each speculating slot
+    ``[last_token, d_1..d_k]`` as one ``(S, k+1)`` block, computes every
+    position's greedy argmax, accepts the longest draft prefix the argmax
+    confirms, and rolls each row's ``(h, c)`` state back to exactly its
+    accepted length (a masked chunk advance from the pre-step state).  A
+    verify step emits 1..k+1 tokens per slot, every one bit-identical to
+    1-token greedy decode by construction: drafts only decide how many
+    greedy tokens one dispatch gets to confirm, never their values.
 
 Bit-exactness contract (what the test harness locks down): every row of the
 fused integer step is computed independently of the other rows (the packed
@@ -47,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.spec_decode import Drafter, NGramDrafter
 from repro.models import lstm_lm
 
 
@@ -85,6 +98,13 @@ class StreamResult:
     * ``ttft_s``     -- wall-clock from admission to the first token.
     * ``tokens_per_s`` -- generated tokens over the stream's residency
       (admission wall-clock to finish wall-clock).
+
+    Speculation metrics (both 0 when the engine ran with ``speculate=0`` or
+    the stream never drafted): ``drafted_tokens`` counts draft candidates
+    this stream's drafter proposed, ``accepted_draft_tokens`` how many of
+    them verification confirmed (the stream additionally emits one
+    model-corrected token per verify step, so its generated total can
+    exceed its accepted drafts).
     """
 
     rid: int
@@ -96,6 +116,16 @@ class StreamResult:
     ttft_steps: Optional[int] = None
     ttft_s: Optional[float] = None
     tokens_per_s: Optional[float] = None
+    drafted_tokens: int = 0
+    accepted_draft_tokens: int = 0
+
+    @property
+    def accept_rate(self) -> Optional[float]:
+        """Fraction of this stream's drafts that verified (None if it
+        never drafted)."""
+        if not self.drafted_tokens:
+            return None
+        return self.accepted_draft_tokens / self.drafted_tokens
 
 
 @dataclasses.dataclass
@@ -112,6 +142,12 @@ class EngineStats:
     mean_ttft_steps: float = 0.0
     mean_ttft_s: float = 0.0
     mean_stream_tokens_per_s: float = 0.0
+    # speculative-decode accounting (all 0 when speculate=0)
+    speculate: int = 0  # draft budget k the engine ran with
+    spec_steps: int = 0  # engine steps that ran the verify program
+    spec_slot_steps: int = 0  # (slot, step) pairs that speculated
+    drafted_tokens: int = 0  # draft candidates proposed across all streams
+    accepted_draft_tokens: int = 0  # drafts confirmed by verification
 
     @property
     def occupancy(self) -> float:
@@ -121,6 +157,26 @@ class EngineStats:
     @property
     def tokens_per_s(self) -> float:
         return self.generated_tokens / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def accept_rate(self) -> float:
+        """Fraction of proposed draft tokens that verification confirmed."""
+        if not self.drafted_tokens:
+            return 0.0
+        return self.accepted_draft_tokens / self.drafted_tokens
+
+    @property
+    def accepted_tokens_per_spec_step(self) -> float:
+        """Mean tokens a SPECULATING slot emits on a verify step: its
+        accepted drafts plus the model-corrected token, i.e.
+        ``1 + accepted_draft_tokens / spec_slot_steps``.  The multi-token
+        decode win per speculation opportunity -- 1.0 means no draft was
+        ever accepted (greedy pace), ``speculate + 1`` is the ceiling.
+        Deliberately per slot-step, NOT per engine step: co-tenant slots
+        emitting in the same step must not inflate it."""
+        if not self.spec_slot_steps:
+            return 0.0
+        return 1.0 + self.accepted_draft_tokens / self.spec_slot_steps
 
 
 @dataclasses.dataclass
@@ -134,6 +190,11 @@ class _Slot:
     admit_wall: float = 0.0
     first_token_step: Optional[int] = None
     first_token_wall: Optional[float] = None
+    # speculation: this stream's drafter (fresh per admission -- draft
+    # history must never leak across the slot's successive tenants)
+    drafter: Optional[Drafter] = None
+    drafted: int = 0  # draft tokens proposed for this stream
+    accepted_drafts: int = 0  # drafts confirmed by verification
 
     @property
     def free(self) -> bool:
@@ -147,7 +208,7 @@ class _Slot:
         return self.generated[self.fed - p.size]  # fed-back generation
 
 
-_ENGINE_FNS: Dict[Tuple[int, str], Tuple[Any, Any, Any, Any]] = {}
+_ENGINE_FNS: Dict[Tuple[int, str], Tuple[Any, Any, Any, Any, Any]] = {}
 _FN_CACHE_MAX = 8  # each entry pins a model's arrays + compiled programs
 
 
@@ -160,8 +221,8 @@ def _cache_put(cache: Dict, key, value) -> None:
 
 
 def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
-    """Jitted (step, chunk_step, chunk_advance, reset) quadruple for the
-    engine loop.
+    """Jitted (step, chunk_step, chunk_advance, verify, reset) programs for
+    the engine loop.
 
     Cached per (qlayers identity, backend) when no sharding constrain is
     installed, so property tests and repeated engine instances over the
@@ -219,6 +280,25 @@ def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return greedy, constrain_state(out)
 
+    def verify(params, tokens, state, valid, draft_len):
+        """One speculative verify iteration over a ``(S, W)`` block.
+
+        Row i's first ``valid[i] - draft_len[i]`` positions are committed
+        tokens (prompt chunk, or the fed-back last generation), the next
+        ``draft_len[i]`` are draft candidates.  Returns the per-position
+        greedy argmax ``(S, W)``, the per-row accepted input count
+        (committed tokens always consume; a draft consumes iff the argmax
+        one position earlier equals it), and the state advanced to exactly
+        each row's accepted length -- rejected positions are rolled back by
+        construction (the advance is a masked chunk advance from the
+        pre-step state, the same executor chunked prefill trusts).  Idle
+        rows (``valid == 0``) stay frozen, subsuming the active mask.
+        """
+        pred, accepted, out = lstm_lm.quant_verify_step(
+            params, qlayers, cfg, tokens, state, valid, draft_len,
+            backend=backend)
+        return pred, accepted, constrain_state(out)
+
     def chunk_advance(params, tokens, state, valid):
         """Chunked iteration where NO slot emits a token this step (every
         active row is mid-prompt with > K tokens still to feed): advance
@@ -232,6 +312,7 @@ def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
         jax.jit(step),
         jax.jit(chunk_step),
         jax.jit(chunk_advance),
+        jax.jit(verify),
         jax.jit(lambda state, slot: lstm_lm.reset_quant_slot(
             qlayers, state, slot)),
     )
@@ -252,6 +333,18 @@ class ContinuousBatchingEngine:
     fall back to the one-token program, so pure generation never pays the
     K-wide block.
 
+    ``speculate``: draft budget k for speculative decoding.  With ``k > 0``
+    each generating slot's drafter (``drafter_factory``, default
+    ``NGramDrafter``: a suffix cache over that stream's own tokens) proposes
+    up to k continuation tokens per step, and steps where at least one slot
+    drafts run the jitted masked-chunk **verify** program over a
+    ``(S, k+1)`` block: per-position argmax, longest-confirmed-prefix
+    acceptance, and per-row state rollback to the accepted length, emitting
+    1..k+1 tokens per slot per step.  Output tokens are bit-identical to
+    ``speculate=0`` (and to ``decode_single``) by construction; steps where
+    no slot drafts fall back to the one-token / chunked-prefill programs,
+    so workloads the drafter can't predict never pay the wide block.
+
     ``mesh``/``rules``: optional batch-axis sharding hook -- when given, the
     slot state is placed via ``runtime.sharding.engine_state_shardings`` and
     per-step token/valid blocks via ``engine_block_sharding``, so the slot
@@ -259,17 +352,24 @@ class ContinuousBatchingEngine:
     """
 
     def __init__(self, params, qlayers, cfg, n_slots: int, *,
-                 backend: str = "xla", chunk: int = 1, mesh=None, rules=None):
+                 backend: str = "xla", chunk: int = 1, speculate: int = 0,
+                 drafter_factory=None, mesh=None, rules=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
+        if speculate < 0:
+            raise ValueError(f"speculate must be >= 0, got {speculate}")
         self.params = params
         self.qlayers = qlayers
         self.cfg = cfg
         self.n_slots = n_slots
         self.backend = backend
         self.chunk = chunk
+        self.speculate = speculate
+        self._drafter_factory = (
+            drafter_factory if drafter_factory is not None
+            else NGramDrafter)
         self._slots = [_Slot() for _ in range(n_slots)]
         self._queue: List[Request] = []
         self._state = lstm_lm.init_quant_decode_state(
@@ -295,7 +395,7 @@ class ContinuousBatchingEngine:
                 return jax.device_put(x, s)
 
             self._put = _put
-        (self._step, self._chunk_step, self._chunk_advance,
+        (self._step, self._chunk_step, self._chunk_advance, self._verify,
          self._reset) = _engine_step_fns(qlayers, cfg, backend, constrain)
 
     # -- queue management ---------------------------------------------------
@@ -330,8 +430,17 @@ class ContinuousBatchingEngine:
             if not slot.free:
                 continue
             req = self._queue.pop(0)
+            drafter = None
+            if self.speculate:
+                # a FRESH drafter per admission, reset() besides (the
+                # documented lifecycle -- so pooled/shared factory
+                # instances also start blank): the slot's previous tenant
+                # must never leak draft history into this stream
+                drafter = self._drafter_factory()
+                drafter.reset()
+                drafter.observe(req.prompt.tolist())
             self._slots[i] = _Slot(request=req, admitted_step=step_idx,
-                                   admit_wall=now)
+                                   admit_wall=now, drafter=drafter)
             self._state = self._reset(self._state, jnp.int32(i))
 
     def _result(self, slot: _Slot, finished_step: int, now: float,
@@ -353,6 +462,8 @@ class ContinuousBatchingEngine:
             ttft_steps=ttft_steps,
             ttft_s=ttft_s,
             tokens_per_s=tps,
+            drafted_tokens=slot.drafted,
+            accepted_draft_tokens=slot.accepted_drafts,
         )
 
     def run(self, max_steps: Optional[int] = None
@@ -365,40 +476,91 @@ class ContinuousBatchingEngine:
         max_active = 0
         prompt_tokens = 0
         generated = 0
+        spec_steps = 0
+        spec_slot_steps = 0
         t0 = time.perf_counter()
         while self._queue or any(not s.free for s in self._slots):
             if max_steps is not None and step_idx >= max_steps:
                 break
             self._admit(step_idx, time.perf_counter())
-            # chunked prefill only pays when some slot still has >= 2 prompt
-            # tokens to teacher-force; otherwise use the one-token program
-            # so pure generation never pays the K-wide block
-            chunk = 1
-            if self.chunk > 1 and any(
-                    not s.free and s.request.prompt.size - s.fed >= 2
-                    for s in self._slots):
-                chunk = self.chunk
-            tokens = np.zeros((self.n_slots, chunk), np.int32)
+            # speculative drafts: ask each generating slot's drafter for up
+            # to k candidates, capped so even a fully-accepted block lands
+            # exactly on the stream's remaining budget (a slot one token
+            # from done never drafts -- its drafts could never be emitted)
+            drafts: Dict[int, List[int]] = {}
+            if self.speculate:
+                for i, slot in enumerate(self._slots):
+                    if slot.free or slot.fed < slot.request.prompt.size:
+                        continue
+                    room = slot.request.max_new_tokens - len(slot.generated)
+                    if room >= 2:
+                        k = min(self.speculate, room - 1)
+                        # clamp: a custom Drafter returning more than asked
+                        # must not overflow the block or the stream budget
+                        d = list(slot.drafter.draft(k))[:k]
+                        if d:
+                            drafts[i] = d
+            # pick this step's program: the (S, k+1) verify block when any
+            # slot drafted; else chunked prefill when some slot still has
+            # >= 2 prompt tokens to teacher-force; else the one-token step
+            # -- so speculate=0 engines run exactly the pre-speculation
+            # program sequence, and undraftable workloads never pay the
+            # wide block
+            chunk_pending = self.chunk > 1 and any(
+                not s.free and s.request.prompt.size - s.fed >= 2
+                for s in self._slots)
+            if drafts:
+                # a mixed step (drafting slots + mid-prefill co-tenants)
+                # widens to whichever program is larger: the verify step
+                # handles arbitrary per-row valid/draft_len, so chunked
+                # prefill must not be capped at k+1 when chunk > k+1
+                width = max(self.speculate + 1,
+                            self.chunk if chunk_pending else 1)
+            elif chunk_pending:
+                width = self.chunk
+            else:
+                width = 1
+            tokens = np.zeros((self.n_slots, width), np.int32)
             valid = np.zeros((self.n_slots,), np.int32)
+            draft_len = np.zeros((self.n_slots,), np.int32)
+            fed_before = [s.fed for s in self._slots]
             for i, slot in enumerate(self._slots):
                 if slot.free:
                     continue
                 rem = slot.request.prompt.size - slot.fed
-                if rem >= 1:  # teacher-forced prefill: up to `chunk` tokens
-                    n = min(chunk, rem)
+                if rem >= 1:  # teacher-forced prefill: up to `width` tokens
+                    n = min(width, rem)
                     tokens[i, :n] = slot.request.prompt[
                         slot.fed:slot.fed + n]
-                else:  # mid-generation: feed back the latest token
-                    n = 1
+                else:  # mid-generation: feed back latest token (+ drafts)
+                    d = drafts.get(i, ())
+                    n = 1 + len(d)
                     tokens[i, 0] = slot.next_token()
+                    tokens[i, 1:n] = d
+                    draft_len[i] = len(d)
                 valid[i] = n
             n_active = int((valid > 0).sum())
             active_slot_steps += n_active
             max_active = max(max_active, n_active)
-            if chunk == 1:
+            # dispatch ONE jitted program; afterwards ``consumed[i]`` is the
+            # inputs row i advanced by and ``preds[i, p]`` the greedy token
+            # following input position p (for every consumed position on
+            # verify steps; only at a row's single emitting position on the
+            # one-token / chunked paths, which emit at most one token)
+            if drafts:
+                pred, accepted, self._state = self._verify(
+                    self.params, self._put(jnp.asarray(tokens)),
+                    self._state, self._put(jnp.asarray(valid)),
+                    self._put(jnp.asarray(draft_len)))
+                preds = np.asarray(pred)
+                consumed = np.asarray(accepted)
+                spec_steps += 1
+            elif width == 1:
                 greedy, self._state = self._step(
                     self.params, self._put(jnp.asarray(tokens[:, 0])),
                     self._state, self._put(jnp.asarray(valid > 0)))
+                preds = np.asarray(greedy)[:, None]
+                consumed = valid
             else:
                 # a slot emits a token this step iff it consumes its last
                 # prompt token (0 < remaining <= chunk) or is generating
@@ -407,35 +569,52 @@ class ContinuousBatchingEngine:
                 # the host sync so consecutive prefill chunks pipeline.
                 emits = any(
                     not s.free and
-                    s.request.prompt.size - s.fed <= chunk
+                    s.request.prompt.size - s.fed <= width
                     for s in self._slots)
+                consumed = valid
                 if emits:
                     greedy, self._state = self._chunk_step(
                         self.params, self._put(jnp.asarray(tokens)),
                         self._state, self._put(jnp.asarray(valid)))
+                    # the chunked head reads each row's LAST VALID position,
+                    # the only one the emission rule below can select
+                    greedy = np.asarray(greedy)
+                    preds = np.zeros((self.n_slots, width), np.int32)
+                    for i in range(self.n_slots):
+                        if valid[i]:
+                            preds[i, valid[i] - 1] = greedy[i]
                 else:
-                    greedy = None
+                    preds = None  # never read: no row emits this step
                     self._state = self._chunk_advance(
                         self.params, self._put(jnp.asarray(tokens)),
                         self._state, self._put(jnp.asarray(valid)))
-            if greedy is not None:
-                greedy = np.asarray(greedy)
             now = time.perf_counter()
             for i, slot in enumerate(self._slots):
                 if slot.free:
                     continue
                 req = slot.request
-                n = int(valid[i])
+                n = int(consumed[i])
+                fb = fed_before[i]
                 # prompt tokens consumed this step (0 when mid-generation)
-                prompt_tokens += min(n, max(int(req.prompt.size) - slot.fed,
-                                            0))
+                prompt_tokens += min(n, max(int(req.prompt.size) - fb, 0))
                 slot.fed += n
-                if slot.fed >= req.prompt.size:
-                    # last prompt token consumed, or a fed-back generation:
-                    # this step's logits carry the next generated token
-                    # (greedy is always materialized on such steps: reaching
-                    # fed >= prompt.size implies `emits` was True above)
-                    slot.generated.append(int(greedy[i]))
+                if draft_len[i]:
+                    # accepted drafts = consumed inputs minus the committed
+                    # fed-back token (draft capping keeps emissions within
+                    # budget, so no accepted token is ever discarded); the
+                    # engine-wide totals are summed from StreamResults at
+                    # stats build -- every slot ends up in results
+                    slot.drafted += int(draft_len[i])
+                    slot.accepted_drafts += n - 1
+                    spec_slot_steps += 1
+                for p in range(n):
+                    # consuming input position p yields a generated token
+                    # iff p is the row's last prompt token or later
+                    if fb + p + 1 < req.prompt.size:
+                        continue
+                    slot.generated.append(int(preds[i, p]))
+                    if slot.drafter is not None:
+                        slot.drafter.observe([slot.generated[-1]])
                     if len(slot.generated) == 1:
                         slot.first_token_step = step_idx
                         slot.first_token_wall = now
@@ -468,6 +647,13 @@ class ContinuousBatchingEngine:
             prompt_tokens=prompt_tokens,
             wall_s=wall,
             chunk=self.chunk,
+            speculate=self.speculate,
+            spec_steps=spec_steps,
+            spec_slot_steps=spec_slot_steps,
+            drafted_tokens=sum(
+                r.drafted_tokens for r in results.values()),
+            accepted_draft_tokens=sum(
+                r.accepted_draft_tokens for r in results.values()),
             mean_ttft_steps=(sum(r.ttft_steps for r in ttfts) / len(ttfts)
                              if ttfts else 0.0),
             mean_ttft_s=(sum(r.ttft_s for r in ttfts) / len(ttfts)

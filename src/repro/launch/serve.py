@@ -15,14 +15,20 @@ jitted fused step that decodes, and evicted mid-flight when their budget is
 spent.  ``--chunk K`` enables chunked prefill: up to K prompt tokens per
 slot per engine step (one masked ``(S, K)`` dispatch instead of K), cutting
 time-to-first-token ~K-fold on prompt-heavy workloads while every stream
-stays bit-identical to ``--chunk 1`` and to decoding it alone.  The
-workload is either synthetic (``--requests N``) or a JSON trace (``--trace
-requests.json``, entries ``{"prompt_len"|"prompt", "gen", "id"?}``).
-Reported metrics include mean TTFT (steps + wall-clock) and per-stream
-tokens/sec.
+stays bit-identical to ``--chunk 1`` and to decoding it alone.
+``--speculate k`` enables speculative decoding: each generating slot's
+n-gram drafter proposes up to k continuation tokens per step and one masked
+``(S, k+1)`` verify dispatch accepts the longest greedy-confirmed prefix
+(1..k+1 tokens emitted per slot per step), again bit-identical to
+``--speculate 0``.  The workload is either synthetic (``--requests N``) or
+a JSON trace (``--trace requests.json``, entries ``{"prompt_len"|"prompt",
+"gen", "id"?}``).  Reported metrics include mean TTFT (steps + wall-clock),
+per-stream tokens/sec, and -- under speculation -- the draft accept rate
+and mean accepted tokens per verify step.
 
     PYTHONPATH=src python -m repro.launch.serve --arch lstm-rnnt --smoke \
-        --quant int8-lstm --engine --slots 8 --requests 16 --chunk 4
+        --quant int8-lstm --engine --slots 8 --requests 16 --chunk 4 \
+        --speculate 4
 """
 from __future__ import annotations
 
@@ -104,11 +110,12 @@ def _serve_engine(args, cfg) -> None:
                          "a non-empty --trace)")
     eng = E.ContinuousBatchingEngine(
         params, qlayers, cfg, n_slots=args.slots, backend=args.backend,
-        chunk=args.chunk)
+        chunk=args.chunk, speculate=args.speculate)
     eng.submit_all(requests)
     results, stats = eng.run()
     print(f"arch={cfg.name} quant=int8-lstm engine slots={args.slots} "
-          f"chunk={args.chunk} backend={args.backend}")
+          f"chunk={args.chunk} speculate={args.speculate} "
+          f"backend={args.backend}")
     print(f"served {len(results)}/{len(requests)} requests in "
           f"{stats.wall_s:.2f}s ({stats.steps} steps)")
     print(f"decode tokens/s: {stats.tokens_per_s:.1f} "
@@ -117,6 +124,12 @@ def _serve_engine(args, cfg) -> None:
     print(f"mean TTFT: {stats.mean_ttft_steps:.1f} steps / "
           f"{stats.mean_ttft_s * 1e3:.1f} ms; "
           f"mean stream tokens/s: {stats.mean_stream_tokens_per_s:.1f}")
+    if args.speculate:
+        print(f"speculation: accept rate {stats.accept_rate:.2f} "
+              f"({stats.accepted_draft_tokens}/{stats.drafted_tokens} "
+              f"drafts), {stats.accepted_tokens_per_spec_step:.2f} "
+              f"tokens/slot-step over {stats.spec_slot_steps} speculating "
+              f"slot-steps ({stats.spec_steps} verify steps)")
     first = results[requests[0].rid]
     print("sample:", first.tokens)
 
@@ -180,6 +193,15 @@ def main() -> None:
                          "bit-exact vs --chunk 1. Pure generation is "
                          "unaffected, so K>1 only helps when prompts are "
                          "long relative to generation budgets")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="draft budget k for --engine speculative decoding: "
+                         "an n-gram drafter proposes up to k continuation "
+                         "tokens per generating slot per step, verified in "
+                         "one masked (S, k+1) dispatch that emits every "
+                         "greedy-confirmed token (1..k+1 per slot per "
+                         "step). Bit-exact vs --speculate 0; pays off on "
+                         "self-repetitive streams (the drafter only knows "
+                         "each stream's own history)")
     ap.add_argument("--requests", type=int, default=16,
                     help="synthetic workload size for --engine")
     ap.add_argument("--trace", default=None,
@@ -191,6 +213,11 @@ def main() -> None:
         ap.error("--prompt-len must be >= 1")
     if args.chunk < 1:
         ap.error("--chunk must be >= 1")
+    if args.speculate < 0:
+        ap.error("--speculate must be >= 0")
+    if args.speculate and not args.engine:
+        ap.error("--speculate requires --engine (speculative decoding is a "
+                 "continuous-batching program)")
     if args.engine and args.quant != "int8-lstm":
         ap.error("--engine requires --quant int8-lstm (the integer LSTM LM "
                  "is the only model with per-slot (h, c) decode state)")

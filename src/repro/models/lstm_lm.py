@@ -279,6 +279,59 @@ def quant_chunk_step(params, qlayers, cfg: ArchConfig, tokens, states,
     return logits, new_states
 
 
+def quant_verify_step(params, qlayers, cfg: ArchConfig, tokens, states,
+                      valid_len, draft_len, backend: str = "xla"):
+    """Speculative verify step: masked chunk forward with an all-positions
+    head, in-graph acceptance, and per-row rollback to the accepted length.
+
+    ``tokens`` is a ``(B, W)`` block where row b's first ``valid_len[b]``
+    positions are real inputs: the leading ``valid_len[b] - draft_len[b]``
+    are **committed** tokens (teacher-forced prompt tokens, or the fed-back
+    last generated token) and the trailing ``draft_len[b]`` are **draft
+    candidates** proposed by a drafter.  The step
+
+    1. runs the ragged masked executor over the whole block ONCE from
+       ``states`` and evaluates the LM head at every position (unlike
+       ``quant_chunk_step``'s last-valid-only head: here each position's
+       argmax is a verdict on the next draft),
+    2. computes each row's **accepted length** in-graph: committed positions
+       are always consumed; draft position j is consumed iff every earlier
+       draft was and the model's argmax at position j-1 equals the draft
+       token at j (greedy acceptance -- the draft IS what greedy decode
+       would have fed),
+    3. re-advances ``states`` with the masked executor to exactly the
+       accepted length -- a chunk advance with per-row rollback, bit-equal
+       to teacher-forcing each row's accepted prefix alone, because it IS
+       that program.  State contributions of rejected positions never
+       reach the committed state.
+
+    Returns ``(pred, accepted, new_states)``: ``pred`` ``(B, W)`` int32 is
+    the per-position greedy argmax (position j is the model's next token
+    after consuming inputs ``0..j``; garbage for ``j >= accepted[b]``),
+    ``accepted`` ``(B,)`` int32 is the number of inputs consumed
+    (``valid_len - draft_len <= accepted <= valid_len``; 0 for idle rows).
+    The caller emits ``pred[b, j]`` for each consumed generation position --
+    up to ``draft_len + 1`` tokens per row per step, every one bit-identical
+    to 1-token greedy decode by construction.
+    """
+    x, _ = _quant_stack(params, qlayers, tokens, states, backend, valid_len)
+    logits = emb.logits_head(params, x.astype(jnp.bfloat16))
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    base = valid_len - draft_len
+    pos = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+    # draft position j matches iff the model's prediction after position
+    # j-1 equals the draft fed at j (pos 0 is never a draft: base >= 1 for
+    # every row that feeds anything)
+    match = jnp.concatenate(
+        [jnp.ones((tokens.shape[0], 1), bool), pred[:, :-1] == tokens[:, 1:]],
+        axis=1)
+    ok = (pos < base[:, None]) | ((pos < valid_len[:, None]) & match)
+    accepted = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+    _, new_states = _quant_stack(params, qlayers, tokens, states, backend,
+                                 accepted)
+    return pred, accepted, new_states
+
+
 def quant_chunk_advance(params, qlayers, cfg: ArchConfig, tokens, states,
                         valid_len, backend: str = "xla"):
     """Chunked-prefill advance: ragged stack over ``(B, K)``, state only.

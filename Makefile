@@ -16,10 +16,17 @@ SERVE_BACKEND ?= xla
 SPEC ?= 4
 SPEC_GATE ?= 1.3
 TTFT_BAR ?= 2.0
+# scheduler knobs: slot-scheduling policy for the oversubscribed leg of the
+# preemption benchmark + the engine smoke, admission headroom ratio, and the
+# tokens/s gate of oversubscribed-vs-reject (relaxed in CI smoke: the win is
+# structural -- occupancy -- but 2-core runners are noisy)
+POLICY ?= srf
+OVERSUB ?= 3.0
+PREEMPT_GATE ?= 1.2
 
 .PHONY: check test collect bench prefill-bench prefill-bench-smoke \
-	engine-smoke engine-bench engine-ttft-bench spec-bench \
-	spec-bench-smoke
+	engine-smoke scheduler-smoke engine-bench engine-ttft-bench \
+	spec-bench spec-bench-smoke preempt-bench preempt-bench-smoke
 
 collect:
 	$(PYTEST) -q --collect-only >/dev/null
@@ -57,6 +64,16 @@ engine-smoke:
 		--slots 8 --requests 12 --prompt-len 8 --gen 8 \
 		--chunk $(CHUNK) --backend $(SERVE_BACKEND)
 
+# scheduler smoke: the same serve CLI under a preempting policy with
+# oversubscription (more live streams than slots, time-multiplexed through
+# the host-side state pool); POLICY selects fifo|priority|srf|rr
+scheduler-smoke:
+	timeout 300 env PYTHONPATH=src $(PY) -m repro.launch.serve \
+		--arch lstm-rnnt --smoke --quant int8-lstm --engine \
+		--slots 4 --requests 12 --prompt-len 8 --gen 8 \
+		--policy $(POLICY) --oversubscribe $(OVERSUB) \
+		--backend $(SERVE_BACKEND)
+
 # engine vs sequential serving with the >=2x acceptance gate enforced
 engine-bench:
 	PYTHONPATH=src $(PY) benchmarks/engine_throughput.py \
@@ -88,3 +105,22 @@ spec-bench-smoke:
 		--backend $(SERVE_BACKEND) --speculate $(SPEC) \
 		$(if $(filter-out 0,$(SPEC)),--check-accept $(SPEC_GATE)) \
 		--out BENCH_spec_smoke.json
+
+# preempt/resume swap cost + bursty-trace goodput: oversubscribed POLICY
+# scheduling vs the FIFO-with-rejection baseline, bit-exactness enforced on
+# every served stream, tokens/s gate >= PREEMPT_GATE; writes
+# BENCH_preempt.json
+preempt-bench:
+	PYTHONPATH=src $(PY) benchmarks/preempt_resume.py \
+		--slots 4 --bursts 4 --policy $(POLICY) \
+		--oversubscribe $(OVERSUB) \
+		--check-speedup $(PREEMPT_GATE) --out BENCH_preempt.json
+
+# CI smoke: same gate machinery, smaller trace + relaxed bar so 2-core
+# runners finish fast; proves the gate path end-to-end on every push
+preempt-bench-smoke:
+	timeout 1500 env PYTHONPATH=src $(PY) benchmarks/preempt_resume.py \
+		--slots 4 --bursts 3 --period 16 \
+		--backend $(SERVE_BACKEND) --policy $(POLICY) \
+		--oversubscribe $(OVERSUB) \
+		--check-speedup $(PREEMPT_GATE) --out BENCH_preempt_smoke.json

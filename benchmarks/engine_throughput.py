@@ -63,9 +63,12 @@ def run_sequential(params, qlayers, cfg, requests, backend):
     return out, tokens / wall, wall
 
 
-def run_engine(params, qlayers, cfg, requests, slots, backend, chunk):
+def run_engine(params, qlayers, cfg, requests, slots, backend, chunk,
+               policy="fifo", oversubscribe=1.0):
     eng = E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=slots,
-                                     backend=backend, chunk=chunk)
+                                     backend=backend, chunk=chunk,
+                                     policy=policy,
+                                     oversubscribe=oversubscribe)
     eng.submit_all(list(requests))
     results, stats = eng.run()
     return results, stats
@@ -84,6 +87,13 @@ def main() -> int:
                          "prefill-dominated)")
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "pallas", "interpret"])
+    ap.add_argument("--policy", default="fifo",
+                    help="engine scheduling policy (launch/scheduler.py); "
+                         "every policy stays bit-exact, so the gates apply "
+                         "unchanged")
+    ap.add_argument("--oversubscribe", type=float, default=1.0,
+                    help="engine admission headroom (live streams <= "
+                         "ceil(ratio * slots))")
     ap.add_argument("--check-speedup", type=float, default=None,
                     help="exit nonzero unless engine/sequential >= this")
     ap.add_argument("--check-ttft-speedup", type=float, default=None,
@@ -122,7 +132,8 @@ def main() -> int:
     seq_out, seq_tps, seq_wall = run_sequential(
         params, qlayers, cfg, requests, args.backend)
     eng_out, stats = run_engine(
-        params, qlayers, cfg, requests, args.slots, args.backend, args.chunk)
+        params, qlayers, cfg, requests, args.slots, args.backend, args.chunk,
+        args.policy, args.oversubscribe)
 
     # scheduling (and chunking) must not change a single token, on ANY
     # stream -- a hard exit, not an assert, so `python -O` can't skip it
@@ -135,6 +146,7 @@ def main() -> int:
     gen_tokens = sum(len(v) for v in seq_out.values())
     print(f"engine_throughput,arch={cfg.name},backend={args.backend},"
           f"requests={args.requests},slots={args.slots},chunk={args.chunk},"
+          f"policy={stats.policy},oversubscribe={stats.oversubscribe},"
           f"prompt_heavy={int(args.prompt_heavy)}")
     print(f"engine_throughput/sequential_tok_s,{seq_tps:.1f},"
           f"wall_s={seq_wall:.2f},gen_tokens={gen_tokens}")

@@ -1,75 +1,82 @@
-"""Slot-based continuous-batching engine for the integer-only LSTM LM.
+"""Continuous-batching executor for the integer-only LSTM LM.
 
-The serving problem: requests with different prompt lengths and generation
-budgets arrive as a queue, and naive serving decodes them one stream at a
-time (one kernel dispatch per token per stream).  Because integer LSTM
-decode state is just per-stream ``(h, c)`` vectors -- no paged KV cache, no
-attention over a ragged history -- continuous batching is uniquely cheap
-here: a fixed ``(B_slots, H)`` decode batch where
+Since PR 6 the serving stack is a three-layer split, cashing in the paper's
+core deployment advantage -- an integer LSTM's whole recurrent state is two
+small integer vectors per layer per stream, so parking and resuming a
+stream is nearly free and bit-exact:
 
-  * pending requests are **admitted** into free slots (the slot's int8
-    hidden / int16 cell rows are reset to their initial values),
-  * admitted streams are **prefilled by teacher-forcing** their prompt
-    through the same fused decode step that drives generation (one token
-    per step, so mixed prefill/decode shares a single jitted program with
-    static shapes -- no per-prompt-length recompilation); with
-    ``chunk=K > 1`` a second jitted **chunked-prefill** program feeds each
-    slot up to K prompt tokens per step as an ``(S, K)`` block with per-slot
-    valid lengths (the masked ragged executor freezes each row's state past
-    its valid prefix), cutting time-to-first-token for long prompts ~K-fold
-    while staying bit-exact; since PR 4 the block's input GEMM is hoisted
-    out of the recurrent scan (one time-batched ``(S*K, d_in)`` packed
-    matmul per layer), so wider chunks also raise arithmetic intensity
-    instead of just amortizing dispatches,
-  * finished streams are **evicted mid-flight** and their slot is re-used
-    by the next pending request on the following step,
-  * ONE jitted fused decode step (PR 1's packed ``[i|f|z|o]`` executor, any
-    ``backend=`` xla | pallas | interpret) advances all slots per iteration,
-    with an **active-mask** freezing the state of empty slots,
-  * with ``speculate=k > 0``, generation itself goes multi-token: a cheap
-    per-slot drafter (``launch/spec_decode.py``, default: an n-gram suffix
-    cache over the stream's own tokens) proposes up to k continuation
-    tokens, and a third jitted program -- the **masked-chunk verify step**
-    (``lstm_lm.quant_verify_step``) -- feeds each speculating slot
-    ``[last_token, d_1..d_k]`` as one ``(S, k+1)`` block, computes every
-    position's greedy argmax, accepts the longest draft prefix the argmax
-    confirms, and rolls each row's ``(h, c)`` state back to exactly its
-    accepted length (a masked chunk advance from the pre-step state).  A
-    verify step emits 1..k+1 tokens per slot, every one bit-identical to
-    1-token greedy decode by construction: drafts only decide how many
-    greedy tokens one dispatch gets to confirm, never their values.
+  * **scheduler** (``launch/scheduler.py``) -- a pluggable policy decides
+    each step which streams occupy the S decode-batch slots: FIFO (the
+    default, reproducing the pre-split engine's exact step-by-step slot
+    assignments), strict priority, shortest-remaining-first, and
+    round-robin-fair time slicing, plus a FIFO-with-rejection baseline for
+    admission-control benchmarks.  Policies may **oversubscribe**: admit
+    more live streams than slots and multiplex them by preemption.
+  * **state pool** (``launch/state_pool.py``) -- preempted streams park
+    their quantized ``(h, c, len)`` state in host-side pages and resume
+    later bit-exactly (integer state: the swap round trip re-rounds
+    nothing).  The stream's drafter travels with its host bookkeeping, so
+    speculation state survives preemption too.
+  * **executor** (this module) -- owns ONLY the jitted step programs
+    (one-token / chunked-prefill / chunk-advance / verify) and the
+    ``(S, ...)`` slot tensors, and applies the scheduler's decision each
+    iteration: park evicted residents, restore elected pool streams into
+    freed slots, reset slots for fresh admissions, then dispatch one fused
+    integer step over all S rows.
+
+The executor's step programs are unchanged from PRs 2-5: pending requests
+prefill by teacher-forcing through the same fused decode step that
+generates (``chunk=K > 1`` feeds up to K prompt tokens per slot per step
+through the masked ragged executor), finished streams are evicted
+mid-flight, an active-mask freezes empty rows, and ``speculate=k > 0``
+verifies per-slot drafter proposals in one masked ``(S, k+1)`` block with
+in-graph longest-confirmed-prefix acceptance.
 
 Bit-exactness contract (what the test harness locks down): every row of the
-fused integer step is computed independently of the other rows (the packed
-matmuls are per-row, the cell fusion and integer LayerNorm reduce over the
-hidden dim only), and integer arithmetic is deterministic.  Therefore the
-token sequence a stream produces inside a busy engine batch is **bitwise
-identical** to decoding that stream alone (``decode_single``), regardless of
-slot index, co-tenants, or admission order.  ``tests/test_engine.py``
-asserts this per stream, and the golden tests pin the absolute values.
+fused integer step is computed independently of the other rows, integer
+arithmetic is deterministic, and the pool round trip copies integers
+verbatim.  Therefore the token sequence a stream produces inside a busy
+engine batch is **bitwise identical** to decoding that stream alone
+(``decode_single``) -- regardless of slot index, co-tenants, admission
+order, scheduling policy, preemption schedule, or oversubscription ratio.
+``tests/test_engine.py`` and ``tests/test_scheduler.py`` assert this per
+stream, and the golden tests pin the absolute values.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.scheduler import (Decision, Scheduler, StreamView,
+                                    get_scheduler)
 from repro.launch.spec_decode import Drafter, NGramDrafter
+from repro.launch.state_pool import StatePool
 from repro.models import lstm_lm
 
 
 @dataclasses.dataclass
 class Request:
-    """One generation request: a prompt and a generation budget."""
+    """One generation request: a prompt, a generation budget, and optional
+    scheduling attributes.
+
+    ``priority`` (larger = more urgent) only matters to priority-aware
+    policies; ``arrival`` is the engine step at which the request becomes
+    schedulable (0 = immediately), letting one trace schema express the
+    open-loop bursty workloads the scheduling benchmarks replay.
+    """
 
     rid: int
     prompt: np.ndarray  # (P,) int32, P >= 1
     max_new_tokens: int  # >= 1
+    priority: int = 0
+    arrival: float = 0.0
 
     def __post_init__(self):
         # plain raises, not assert: engine invariants must survive python -O
@@ -80,21 +87,34 @@ class Request:
             raise ValueError(
                 f"request {self.rid}: max_new_tokens must be >= 1, "
                 f"got {self.max_new_tokens}")
+        self.priority = int(self.priority)
+        self.arrival = float(self.arrival)
+        if not math.isfinite(self.arrival) or self.arrival < 0:
+            raise ValueError(
+                f"request {self.rid}: arrival must be a finite step "
+                f">= 0, got {self.arrival}")
 
 
 @dataclasses.dataclass
 class StreamResult:
     """Finished stream: generated tokens + admission/finish bookkeeping.
 
-    ``truncated`` marks a stream cut off by ``run(max_steps=...)`` before
-    its generation budget was spent (tokens holds the partial output).
+    ``truncated`` marks a stream cut off before its generation budget was
+    spent -- by ``run(max_steps=...)``, by a user ``evict``, or (with the
+    rejection policy) refused admission outright (``rejected=True``, no
+    tokens).  ``state_preserved`` records whether the stream's decode state
+    (and drafter) survived in the pool: a preserved stream can be
+    ``resume``-d and continued bit-exactly; an unpreserved one is gone.
+    ``preemptions`` counts how often the scheduler parked the stream
+    mid-flight (0 under FIFO).
 
     Latency metrics (``None`` when the stream never emitted a token, i.e. it
     was truncated mid-prefill):
 
-    * ``ttft_steps`` -- engine steps from admission through the step that
-      produced the first generated token, inclusive (so a 1-prompt-token
-      request has TTFT of 1 step).  Deterministic for a given workload/chunk.
+    * ``ttft_steps`` -- engine steps from first slot admission through the
+      step that produced the first generated token, inclusive (so a
+      1-prompt-token request has TTFT of 1 step).  Deterministic for a given
+      workload/chunk/policy.
     * ``ttft_s``     -- wall-clock from admission to the first token.
     * ``tokens_per_s`` -- generated tokens over the stream's residency
       (admission wall-clock to finish wall-clock).
@@ -118,6 +138,9 @@ class StreamResult:
     tokens_per_s: Optional[float] = None
     drafted_tokens: int = 0
     accepted_draft_tokens: int = 0
+    state_preserved: bool = False
+    preemptions: int = 0
+    rejected: bool = False
 
     @property
     def accept_rate(self) -> Optional[float]:
@@ -148,6 +171,14 @@ class EngineStats:
     spec_slot_steps: int = 0  # (slot, step) pairs that speculated
     drafted_tokens: int = 0  # draft candidates proposed across all streams
     accepted_draft_tokens: int = 0  # drafts confirmed by verification
+    # scheduling accounting (the scheduler/pool split, PR 6)
+    policy: str = "fifo"  # scheduling policy the engine ran with
+    oversubscribe: float = 1.0  # max_live / n_slots admission headroom
+    preemptions: int = 0  # resident streams parked to the pool this run
+    resumes: int = 0  # pool streams restored into slots this run
+    rejected: int = 0  # requests refused admission (rejection policies)
+    peak_live: int = 0  # peak live streams (resident + pooled) in one step
+    pool_state_bytes: int = 0  # host bytes one parked stream occupies
 
     @property
     def occupancy(self) -> float:
@@ -180,35 +211,42 @@ class EngineStats:
 
 
 @dataclasses.dataclass
-class _Slot:
-    """Host-side bookkeeping for one decode-batch row."""
+class _Stream:
+    """Host-side bookkeeping for one live stream.
 
-    request: Optional[Request] = None
+    Unlike the pre-split engine's per-SLOT record, this travels with the
+    STREAM: preemption moves the tensors to the pool but leaves this object
+    (fed counter, generated tokens, drafter, latency stamps) intact, so a
+    resumed stream continues exactly where it stopped -- including its
+    drafter's history, which must never die with the slot.
+    """
+
+    request: Request
     fed: int = 0  # tokens consumed so far (prompt + fed-back generations)
     generated: List[int] = dataclasses.field(default_factory=list)
-    admitted_step: int = 0
+    admitted_step: int = 0  # first step the stream held a slot
     admit_wall: float = 0.0
     first_token_step: Optional[int] = None
     first_token_wall: Optional[float] = None
-    # speculation: this stream's drafter (fresh per admission -- draft
-    # history must never leak across the slot's successive tenants)
+    # speculation: this stream's drafter (fresh per stream start -- draft
+    # history must never leak across streams, but DOES survive preemption)
     drafter: Optional[Drafter] = None
     drafted: int = 0  # draft tokens proposed for this stream
     accepted_drafts: int = 0  # drafts confirmed by verification
-
-    @property
-    def free(self) -> bool:
-        return self.request is None
+    # scheduling: residency + preemption accounting
+    slot: Optional[int] = None  # decode-batch row, None while pooled
+    resident_steps: int = 0  # consecutive steps of the current slot tenure
+    preemptions: int = 0
 
     def next_token(self) -> int:
-        """The token this slot feeds on the upcoming step."""
+        """The token this stream feeds on the upcoming step."""
         p = self.request.prompt
         if self.fed < p.size:
             return int(p[self.fed])  # teacher-forced prefill
         return self.generated[self.fed - p.size]  # fed-back generation
 
 
-_ENGINE_FNS: Dict[Tuple[int, str], Tuple[Any, Any, Any, Any, Any]] = {}
+_ENGINE_FNS: Dict[Tuple[int, str], Tuple[Any, ...]] = {}
 _FN_CACHE_MAX = 8  # each entry pins a model's arrays + compiled programs
 
 
@@ -221,8 +259,8 @@ def _cache_put(cache: Dict, key, value) -> None:
 
 
 def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
-    """Jitted (step, chunk_step, chunk_advance, verify, reset) programs for
-    the engine loop.
+    """Jitted (step, chunk_step, chunk_advance, verify, reset, write)
+    programs for the engine loop.
 
     Cached per (qlayers identity, backend) when no sharding constrain is
     installed, so property tests and repeated engine instances over the
@@ -308,6 +346,11 @@ def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
             params, qlayers, cfg, tokens, state, valid, backend=backend)
         return constrain_state(out)
 
+    def write(state, slot, row_state):
+        """Resume: restore a pool row into decode-batch row ``slot``."""
+        return constrain_state(
+            lstm_lm.write_quant_slot(state, slot, row_state))
+
     fns = (
         jax.jit(step),
         jax.jit(chunk_step),
@@ -315,6 +358,7 @@ def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
         jax.jit(verify),
         jax.jit(lambda state, slot: lstm_lm.reset_quant_slot(
             qlayers, state, slot)),
+        jax.jit(write),
     )
     if constrain is None:
         _cache_put(_ENGINE_FNS, key, fns)
@@ -323,6 +367,20 @@ def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
 
 class ContinuousBatchingEngine:
     """Drives a fixed-slot decode batch over a queue of requests.
+
+    ``policy``: scheduling policy name (``launch.scheduler.POLICIES``:
+    ``fifo`` | ``priority`` | ``srf`` | ``rr`` | ``fifo-reject``) or a
+    ``Scheduler`` instance.  The policy decides each step which streams
+    occupy slots; everything else (state swaps, dispatch, bookkeeping) is
+    the executor's job.  The default FIFO reproduces the pre-split engine's
+    exact step-by-step slot assignments.
+
+    ``oversubscribe``: admission headroom as a multiple of ``n_slots`` --
+    up to ``ceil(oversubscribe * n_slots)`` streams may be live (holding a
+    slot or parked in the state pool) at once.  With ``1.0`` (default) a
+    stream only starts when a slot is free, like the pre-split engine;
+    ratios > 1 let preempting policies time-multiplex more streams than
+    slots, with every stream still bit-exact vs ``decode_single``.
 
     ``chunk``: prefill chunk size K.  With ``chunk > 1`` a second jitted
     program teacher-forces up to K prompt tokens per slot per engine step as
@@ -334,32 +392,41 @@ class ContinuousBatchingEngine:
     K-wide block.
 
     ``speculate``: draft budget k for speculative decoding.  With ``k > 0``
-    each generating slot's drafter (``drafter_factory``, default
+    each generating stream's drafter (``drafter_factory``, default
     ``NGramDrafter``: a suffix cache over that stream's own tokens) proposes
     up to k continuation tokens per step, and steps where at least one slot
     drafts run the jitted masked-chunk **verify** program over a
     ``(S, k+1)`` block: per-position argmax, longest-confirmed-prefix
     acceptance, and per-row state rollback to the accepted length, emitting
     1..k+1 tokens per slot per step.  Output tokens are bit-identical to
-    ``speculate=0`` (and to ``decode_single``) by construction; steps where
-    no slot drafts fall back to the one-token / chunked-prefill programs,
-    so workloads the drafter can't predict never pay the wide block.
+    ``speculate=0`` (and to ``decode_single``) by construction; the drafter
+    belongs to the STREAM, so it survives preemption and resumes with its
+    history intact.
 
     ``mesh``/``rules``: optional batch-axis sharding hook -- when given, the
-    slot state is placed via ``runtime.sharding.engine_state_shardings`` and
-    per-step token/valid blocks via ``engine_block_sharding``, so the slot
-    dim spreads consistently over the data-parallel mesh axes.
+    slot state is placed via ``runtime.sharding.engine_state_shardings``,
+    per-step token/valid blocks via ``engine_block_sharding``, and pool
+    swap-in rows via ``pool_row_shardings``, so the slot dim spreads
+    consistently over the data-parallel mesh axes with no resharding on the
+    hot loop.
     """
 
     def __init__(self, params, qlayers, cfg, n_slots: int, *,
                  backend: str = "xla", chunk: int = 1, speculate: int = 0,
-                 drafter_factory=None, mesh=None, rules=None):
+                 drafter_factory=None, policy: Union[str, Scheduler] = "fifo",
+                 oversubscribe: float = 1.0, pool_page_size: int = 8,
+                 mesh=None, rules=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         if speculate < 0:
             raise ValueError(f"speculate must be >= 0, got {speculate}")
+        if not (isinstance(oversubscribe, (int, float))
+                and math.isfinite(oversubscribe)) or oversubscribe < 1.0:
+            raise ValueError(
+                f"oversubscribe must be a finite ratio >= 1, "
+                f"got {oversubscribe}")
         self.params = params
         self.qlayers = qlayers
         self.cfg = cfg
@@ -367,15 +434,32 @@ class ContinuousBatchingEngine:
         self.backend = backend
         self.chunk = chunk
         self.speculate = speculate
+        self.oversubscribe = float(oversubscribe)
+        self.max_live = max(n_slots, int(math.ceil(n_slots * oversubscribe)))
+        self.scheduler = get_scheduler(policy)
+        self.pool = StatePool(page_size=pool_page_size)
         self._drafter_factory = (
             drafter_factory if drafter_factory is not None
             else NGramDrafter)
-        self._slots = [_Slot() for _ in range(n_slots)]
+        # stream bookkeeping: pending queue (submission order), live streams
+        # keyed by rid, slot -> rid map, pool parking order, parked (user-
+        # evicted, resumable) streams
         self._queue: List[Request] = []
+        self._submit_idx: Dict[int, int] = {}
+        self._n_submitted = 0
+        self._streams: Dict[int, _Stream] = {}
+        self._slot_rid: List[Optional[int]] = [None] * n_slots
+        self._pool_order: List[int] = []
+        self._parked: Dict[int, _Stream] = {}
+        self._step = 0  # global engine step, persistent across run() calls
+        # (step, event, rid, slot) trail: admissions, preemptions, resumes,
+        # rejections -- what the FIFO-equivalence regression test replays
+        self.schedule_log: List[Tuple[int, str, int, int]] = []
         self._state = lstm_lm.init_quant_decode_state(
             qlayers, n_slots, per_slot_len=True)
         constrain = None
         self._put = lambda x: x
+        self._put_row = lambda tree: tree
         if mesh is not None:
             from repro.runtime import sharding as shlib
 
@@ -395,8 +479,18 @@ class ContinuousBatchingEngine:
                 return jax.device_put(x, s)
 
             self._put = _put
-        (self._step, self._chunk_step, self._chunk_advance, self._verify,
-         self._reset) = _engine_step_fns(qlayers, cfg, backend, constrain)
+            row_sharding_cache: List[Any] = []
+
+            def _put_row(tree):
+                if not row_sharding_cache:
+                    row_sharding_cache.append(
+                        shlib.pool_row_shardings(tree, rules, mesh))
+                return jax.device_put(tree, row_sharding_cache[0])
+
+            self._put_row = _put_row
+        (self._step_fn, self._chunk_step, self._chunk_advance, self._verify,
+         self._reset, self._write) = _engine_step_fns(
+             qlayers, cfg, backend, constrain)
 
     # -- queue management ---------------------------------------------------
 
@@ -404,10 +498,13 @@ class ContinuousBatchingEngine:
         # results are keyed by rid; a duplicate would silently shadow a
         # stream's output, so reject it at the door
         taken = {r.rid for r in self._queue}
-        taken.update(s.request.rid for s in self._slots if not s.free)
+        taken.update(self._streams)
+        taken.update(self._parked)
         if request.rid in taken:
             raise ValueError(f"duplicate request id {request.rid}")
         self._queue.append(request)
+        self._submit_idx[request.rid] = self._n_submitted
+        self._n_submitted += 1
 
     def submit_all(self, requests: Sequence[Request]) -> None:
         for r in requests:
@@ -419,85 +516,300 @@ class ContinuousBatchingEngine:
 
     @property
     def active(self) -> int:
-        return sum(not s.free for s in self._slots)
+        """Streams currently holding a decode-batch slot."""
+        return sum(rid is not None for rid in self._slot_rid)
+
+    @property
+    def live(self) -> int:
+        """Streams holding a slot OR parked in the pool (excludes
+        user-evicted parked streams, which left the live set)."""
+        return len(self._streams)
+
+    # -- scheduling: views, decision application ----------------------------
+
+    def _view(self, stream: _Stream) -> StreamView:
+        req = stream.request
+        return StreamView(
+            rid=req.rid,
+            priority=req.priority,
+            arrival=req.arrival,
+            submit_idx=self._submit_idx[req.rid],
+            prompt_len=int(req.prompt.size),
+            prompt_remaining=max(int(req.prompt.size) - stream.fed, 0),
+            gen_remaining=req.max_new_tokens - len(stream.generated),
+            resident=stream.slot is not None,
+            slot=stream.slot,
+            resident_steps=stream.resident_steps,
+        )
+
+    def _pending_view(self, req: Request) -> StreamView:
+        return StreamView(
+            rid=req.rid,
+            priority=req.priority,
+            arrival=req.arrival,
+            submit_idx=self._submit_idx[req.rid],
+            prompt_len=int(req.prompt.size),
+            prompt_remaining=int(req.prompt.size),
+            gen_remaining=req.max_new_tokens,
+            resident=False,
+        )
+
+    def _preempt(self, rid: int) -> None:
+        """Park a resident stream's state in the pool, freeing its slot."""
+        s = self._streams[rid]
+        row = lstm_lm.slice_state(self._state, s.slot)
+        self.pool.put(rid, jax.device_get(row))
+        self._slot_rid[s.slot] = None
+        s.slot = None
+        s.resident_steps = 0
+        s.preemptions += 1
+        self._pool_order.append(rid)
+        self._n_preempts += 1
+        self.schedule_log.append((self._step, "preempt", rid, -1))
+
+    def _resume(self, rid: int, slot: int) -> None:
+        """Restore a pooled stream's state into a free slot, bit-exactly."""
+        s = self._streams[rid]
+        row = self._put_row(self.pool.take(rid))
+        self._state = self._write(self._state, jnp.int32(slot), row)
+        self._pool_order.remove(rid)
+        self._slot_rid[slot] = rid
+        s.slot = slot
+        s.resident_steps = 0
+        self._n_resumes += 1
+        self.schedule_log.append((self._step, "resume", rid, slot))
+
+    def _start(self, req: Request, slot: int, now: float) -> None:
+        """First admission of a pending request: reset the slot, create the
+        stream record (and its drafter, which lives with the STREAM)."""
+        self._queue.remove(req)
+        drafter = None
+        if self.speculate:
+            # a FRESH drafter per stream, reset() besides (the documented
+            # lifecycle -- so pooled/shared factory instances also start
+            # blank): another stream's history must never leak in
+            drafter = self._drafter_factory()
+            drafter.reset()
+            drafter.observe(req.prompt.tolist())
+        self._streams[req.rid] = _Stream(
+            request=req, admitted_step=self._step, admit_wall=now,
+            drafter=drafter, slot=slot)
+        self._slot_rid[slot] = req.rid
+        self._state = self._reset(self._state, jnp.int32(slot))
+        self.schedule_log.append((self._step, "admit", req.rid, slot))
+
+    def _reject(self, req: Request, now: float,
+                results: Dict[int, StreamResult]) -> None:
+        self._queue.remove(req)
+        results[req.rid] = StreamResult(
+            rid=req.rid, tokens=[], prompt_len=int(req.prompt.size),
+            admitted_step=-1, finished_step=self._step, truncated=True,
+            rejected=True)
+        self._n_rejects += 1
+        self.schedule_log.append((self._step, "reject", req.rid, -1))
+
+    def _apply_schedule(self, now: float,
+                        results: Dict[int, StreamResult]) -> None:
+        """Ask the policy for this step's slot occupancy and apply it:
+        preempt, resume, admit, reject.  Malformed decisions raise -- a
+        scheduler bug must never silently corrupt slot bookkeeping."""
+        resident = [self._view(self._streams[rid])
+                    for rid in self._slot_rid if rid is not None]
+        pooled = [self._view(self._streams[rid])
+                  for rid in self._pool_order]
+        arrived = [r for r in self._queue if r.arrival <= self._step]
+        pending = [self._pending_view(r) for r in arrived]
+        start_budget = max(self.max_live - len(self._streams), 0)
+        decision = self.scheduler.schedule(
+            self._step, resident, pooled, pending, self.n_slots,
+            start_budget)
+        run = list(decision.run)
+        pending_rids = {v.rid for v in pending}
+        known = ({v.rid for v in resident} | {v.rid for v in pooled}
+                 | pending_rids)
+        name = self.scheduler.name
+        if len(run) > self.n_slots or len(set(run)) != len(run):
+            raise RuntimeError(
+                f"scheduler {name!r} returned an invalid run list "
+                f"(> n_slots or duplicates): {run}")
+        if not set(run) <= known:
+            raise RuntimeError(
+                f"scheduler {name!r} scheduled unknown streams: "
+                f"{sorted(set(run) - known)}")
+        if sum(rid in pending_rids for rid in run) > start_budget:
+            raise RuntimeError(
+                f"scheduler {name!r} started more streams than the "
+                f"oversubscription budget {start_budget} allows: {run}")
+        bad_reject = [rid for rid in decision.reject
+                      if rid not in pending_rids or rid in set(run)]
+        if bad_reject:
+            raise RuntimeError(
+                f"scheduler {name!r} rejected non-pending or scheduled "
+                f"streams: {bad_reject}")
+        by_rid = {r.rid: r for r in arrived}
+        for rid in decision.reject:
+            self._reject(by_rid[rid], now, results)
+        run_set = set(run)
+        # 1) park residents the policy un-elected
+        for rid in list(self._slot_rid):
+            if rid is not None and rid not in run_set:
+                self._preempt(rid)
+        # 2) fill free slots (increasing index) with the remaining elected
+        #    streams, in the order the policy listed them
+        newcomers = [rid for rid in run
+                     if rid in pending_rids
+                     or self._streams[rid].slot is None]
+        free_slots = [i for i, rid in enumerate(self._slot_rid)
+                      if rid is None]
+        for slot, rid in zip(free_slots, newcomers):
+            if rid in self._streams:
+                self._resume(rid, slot)
+            else:
+                self._start(by_rid[rid], slot, now)
+        for rid in run_set:
+            self._streams[rid].resident_steps += 1
+
+    # -- user-initiated eviction / resume -----------------------------------
+
+    def evict(self, rid: int, *, preserve: bool = True) -> StreamResult:
+        """Evict a stream mid-flight (between ``run`` calls).
+
+        With ``preserve=True`` (default) the stream's decode state is
+        parked in the pool and its host bookkeeping -- including its
+        drafter -- is retained, so ``resume(rid)`` can continue it later
+        **bit-exactly**; the returned result records
+        ``state_preserved=True``.  With ``preserve=False`` the state is
+        discarded (the pre-split engine's only behavior), recorded as
+        ``state_preserved=False``.  A still-pending request is simply
+        removed from the queue (it never had state).
+        """
+        now = time.perf_counter()
+        for r in self._queue:
+            if r.rid == rid:
+                self._queue.remove(r)
+                return StreamResult(
+                    rid=rid, tokens=[], prompt_len=int(r.prompt.size),
+                    admitted_step=-1, finished_step=max(self._step - 1, 0),
+                    truncated=True, state_preserved=False)
+        s = self._streams.get(rid)
+        if s is None:
+            raise ValueError(
+                f"stream {rid} is not live (finished, parked, or unknown)")
+        if preserve:
+            if s.slot is not None:
+                row = lstm_lm.slice_state(self._state, s.slot)
+                self.pool.put(rid, jax.device_get(row))
+                s.preemptions += 1
+        elif s.slot is None:
+            self.pool.free(rid)  # pooled state dies with the eviction
+        if s.slot is not None:
+            self._slot_rid[s.slot] = None
+            s.slot = None
+        if rid in self._pool_order:
+            self._pool_order.remove(rid)
+        del self._streams[rid]
+        res = self._result(s, max(self._step - 1, 0), now, truncated=True)
+        res.state_preserved = preserve
+        if preserve:
+            self._parked[rid] = s
+        return res
+
+    def resume(self, rid: int) -> None:
+        """Return a ``evict(preserve=True)``-parked stream to the live set;
+        the scheduler will slot it back in on the next ``run`` step and it
+        continues bit-exactly (state from the pool, drafter intact)."""
+        s = self._parked.pop(rid, None)
+        if s is None:
+            raise ValueError(
+                f"stream {rid} is not parked (evict(preserve=True) it "
+                f"first); double resume?")
+        self._streams[rid] = s
+        self._pool_order.append(rid)
 
     # -- the serving loop ---------------------------------------------------
 
-    def _admit(self, step_idx: int, now: float) -> None:
-        for i, slot in enumerate(self._slots):
-            if not self._queue:
-                break
-            if not slot.free:
-                continue
-            req = self._queue.pop(0)
-            drafter = None
-            if self.speculate:
-                # a FRESH drafter per admission, reset() besides (the
-                # documented lifecycle -- so pooled/shared factory
-                # instances also start blank): the slot's previous tenant
-                # must never leak draft history into this stream
-                drafter = self._drafter_factory()
-                drafter.reset()
-                drafter.observe(req.prompt.tolist())
-            self._slots[i] = _Slot(request=req, admitted_step=step_idx,
-                                   admit_wall=now, drafter=drafter)
-            self._state = self._reset(self._state, jnp.int32(i))
-
-    def _result(self, slot: _Slot, finished_step: int, now: float,
+    def _result(self, stream: _Stream, finished_step: int, now: float,
                 truncated: bool) -> StreamResult:
-        req = slot.request
+        req = stream.request
         ttft_steps = ttft_s = tps = None
-        if slot.generated and slot.first_token_step is not None:
-            ttft_steps = slot.first_token_step - slot.admitted_step + 1
-            ttft_s = slot.first_token_wall - slot.admit_wall
-            span = now - slot.admit_wall
-            tps = len(slot.generated) / span if span > 0 else float("inf")
+        if stream.generated and stream.first_token_step is not None:
+            ttft_steps = stream.first_token_step - stream.admitted_step + 1
+            ttft_s = stream.first_token_wall - stream.admit_wall
+            span = now - stream.admit_wall
+            tps = len(stream.generated) / span if span > 0 else float("inf")
         return StreamResult(
             rid=req.rid,
-            tokens=list(slot.generated),
+            tokens=list(stream.generated),
             prompt_len=int(req.prompt.size),
-            admitted_step=slot.admitted_step,
+            admitted_step=stream.admitted_step,
             finished_step=finished_step,
             truncated=truncated,
             ttft_steps=ttft_steps,
             ttft_s=ttft_s,
             tokens_per_s=tps,
-            drafted_tokens=slot.drafted,
-            accepted_draft_tokens=slot.accepted_drafts,
+            drafted_tokens=stream.drafted,
+            accepted_draft_tokens=stream.accepted_drafts,
+            preemptions=stream.preemptions,
         )
 
-    def run(self, max_steps: Optional[int] = None
+    def run(self, max_steps: Optional[int] = None, *,
+            keep_live: bool = False
             ) -> Tuple[Dict[int, StreamResult], EngineStats]:
-        """Serve until the queue and all slots drain.  Returns per-request
-        results keyed by rid plus occupancy/throughput/latency stats."""
+        """Serve until the queue and all live streams drain.  Returns
+        per-request results keyed by rid plus occupancy/throughput/latency/
+        scheduling stats.
+
+        ``max_steps`` bounds THIS call's engine steps.  By default streams
+        still in flight at the bound are returned as truncated results and
+        their state is discarded (``state_preserved=False``), like the
+        pre-split engine; with ``keep_live=True`` they stay live instead
+        (slots, pool entries, drafters intact) so a later ``run`` call
+        continues them bit-exactly -- the stepwise-driving mode the
+        scheduling benchmarks use.
+        """
         results: Dict[int, StreamResult] = {}
-        step_idx = 0
+        ran = 0
         active_slot_steps = 0
         max_active = 0
         prompt_tokens = 0
         generated = 0
         spec_steps = 0
         spec_slot_steps = 0
+        peak_live = len(self._streams)
+        self._n_preempts = 0
+        self._n_resumes = 0
+        self._n_rejects = 0
         t0 = time.perf_counter()
-        while self._queue or any(not s.free for s in self._slots):
-            if max_steps is not None and step_idx >= max_steps:
+        while self._queue or self._streams:
+            if max_steps is not None and ran >= max_steps:
                 break
-            self._admit(step_idx, time.perf_counter())
-            # speculative drafts: ask each generating slot's drafter for up
-            # to k candidates, capped so even a fully-accepted block lands
-            # exactly on the stream's remaining budget (a slot one token
-            # from done never drafts -- its drafts could never be emitted)
+            self._apply_schedule(time.perf_counter(), results)
+            peak_live = max(peak_live, len(self._streams))
+            if not any(rid is not None for rid in self._slot_rid):
+                # nothing runnable (all arrivals in the future): the step
+                # passes idle -- no dispatch, no active accounting
+                self._step += 1
+                ran += 1
+                continue
+            # speculative drafts: ask each generating stream's drafter for
+            # up to k candidates, capped so even a fully-accepted block
+            # lands exactly on the stream's remaining budget (a stream one
+            # token from done never drafts -- its drafts could never be
+            # emitted)
             drafts: Dict[int, List[int]] = {}
             if self.speculate:
-                for i, slot in enumerate(self._slots):
-                    if slot.free or slot.fed < slot.request.prompt.size:
+                for i, rid in enumerate(self._slot_rid):
+                    if rid is None:
                         continue
-                    room = slot.request.max_new_tokens - len(slot.generated)
+                    s = self._streams[rid]
+                    if s.fed < s.request.prompt.size:
+                        continue
+                    room = s.request.max_new_tokens - len(s.generated)
                     if room >= 2:
                         k = min(self.speculate, room - 1)
                         # clamp: a custom Drafter returning more than asked
                         # must not overflow the block or the stream budget
-                        d = list(slot.drafter.draft(k))[:k]
+                        d = list(s.drafter.draft(k))[:k]
                         if d:
                             drafts[i] = d
             # pick this step's program: the (S, k+1) verify block when any
@@ -506,9 +818,12 @@ class ContinuousBatchingEngine:
             # -- so speculate=0 engines run exactly the pre-speculation
             # program sequence, and undraftable workloads never pay the
             # wide block
+            slot_streams: List[Optional[_Stream]] = [
+                self._streams[rid] if rid is not None else None
+                for rid in self._slot_rid]
             chunk_pending = self.chunk > 1 and any(
-                not s.free and s.request.prompt.size - s.fed >= 2
-                for s in self._slots)
+                s is not None and s.request.prompt.size - s.fed >= 2
+                for s in slot_streams)
             if drafts:
                 # a mixed step (drafting slots + mid-prefill co-tenants)
                 # widens to whichever program is larger: the verify step
@@ -523,19 +838,19 @@ class ContinuousBatchingEngine:
             tokens = np.zeros((self.n_slots, width), np.int32)
             valid = np.zeros((self.n_slots,), np.int32)
             draft_len = np.zeros((self.n_slots,), np.int32)
-            fed_before = [s.fed for s in self._slots]
-            for i, slot in enumerate(self._slots):
-                if slot.free:
+            fed_before = [s.fed if s is not None else 0
+                          for s in slot_streams]
+            for i, s in enumerate(slot_streams):
+                if s is None:
                     continue
-                rem = slot.request.prompt.size - slot.fed
+                rem = s.request.prompt.size - s.fed
                 if rem >= 1:  # teacher-forced prefill: up to `width` tokens
                     n = min(width, rem)
-                    tokens[i, :n] = slot.request.prompt[
-                        slot.fed:slot.fed + n]
+                    tokens[i, :n] = s.request.prompt[s.fed:s.fed + n]
                 else:  # mid-generation: feed back latest token (+ drafts)
                     d = drafts.get(i, ())
                     n = 1 + len(d)
-                    tokens[i, 0] = slot.next_token()
+                    tokens[i, 0] = s.next_token()
                     tokens[i, 1:n] = d
                     draft_len[i] = len(d)
                 valid[i] = n
@@ -556,7 +871,7 @@ class ContinuousBatchingEngine:
                 consumed = np.asarray(accepted)
                 spec_steps += 1
             elif width == 1:
-                greedy, self._state = self._step(
+                greedy, self._state = self._step_fn(
                     self.params, self._put(jnp.asarray(tokens[:, 0])),
                     self._state, self._put(jnp.asarray(valid > 0)))
                 preds = np.asarray(greedy)[:, None]
@@ -568,9 +883,9 @@ class ContinuousBatchingEngine:
                 # never be read: run the head-free advance program and skip
                 # the host sync so consecutive prefill chunks pipeline.
                 emits = any(
-                    not s.free and
+                    s is not None and
                     s.request.prompt.size - s.fed <= width
-                    for s in self._slots)
+                    for s in slot_streams)
                 consumed = valid
                 if emits:
                     greedy, self._state = self._chunk_step(
@@ -589,57 +904,65 @@ class ContinuousBatchingEngine:
                         self.params, self._put(jnp.asarray(tokens)),
                         self._state, self._put(jnp.asarray(valid)))
             now = time.perf_counter()
-            for i, slot in enumerate(self._slots):
-                if slot.free:
+            for i, s in enumerate(slot_streams):
+                if s is None:
                     continue
-                req = slot.request
+                req = s.request
                 n = int(consumed[i])
                 fb = fed_before[i]
                 # prompt tokens consumed this step (0 when mid-generation)
                 prompt_tokens += min(n, max(int(req.prompt.size) - fb, 0))
-                slot.fed += n
+                s.fed += n
                 if draft_len[i]:
                     # accepted drafts = consumed inputs minus the committed
                     # fed-back token (draft capping keeps emissions within
                     # budget, so no accepted token is ever discarded); the
                     # engine-wide totals are summed from StreamResults at
                     # stats build -- every slot ends up in results
-                    slot.drafted += int(draft_len[i])
-                    slot.accepted_drafts += n - 1
+                    s.drafted += int(draft_len[i])
+                    s.accepted_drafts += n - 1
                     spec_slot_steps += 1
                 for p in range(n):
                     # consuming input position p yields a generated token
                     # iff p is the row's last prompt token or later
                     if fb + p + 1 < req.prompt.size:
                         continue
-                    slot.generated.append(int(preds[i, p]))
-                    if slot.drafter is not None:
-                        slot.drafter.observe([slot.generated[-1]])
-                    if len(slot.generated) == 1:
-                        slot.first_token_step = step_idx
-                        slot.first_token_wall = now
-                if len(slot.generated) >= req.max_new_tokens:
+                    s.generated.append(int(preds[i, p]))
+                    if s.drafter is not None:
+                        s.drafter.observe([s.generated[-1]])
+                    if len(s.generated) == 1:
+                        s.first_token_step = self._step
+                        s.first_token_wall = now
+                if len(s.generated) >= req.max_new_tokens:
                     results[req.rid] = self._result(
-                        slot, step_idx, now, truncated=False)
-                    generated += len(slot.generated)
-                    self._slots[i] = _Slot()  # evict mid-flight
-            step_idx += 1
-        # hitting max_steps leaves streams in flight: return their partial
-        # generations (marked truncated) instead of silently dropping them.
-        # The step that actually ran last is step_idx - 1 (step_idx was
-        # already advanced past it), matching mid-flight eviction's stamps.
-        now = time.perf_counter()
-        for i, slot in enumerate(self._slots):
-            if slot.free:
-                continue
-            results[slot.request.rid] = self._result(
-                slot, max(step_idx - 1, 0), now, truncated=True)
-            generated += len(slot.generated)
-            self._slots[i] = _Slot()
+                        s, self._step, now, truncated=False)
+                    generated += len(s.generated)
+                    self._slot_rid[i] = None  # evict mid-flight
+                    del self._streams[req.rid]
+            self._step += 1
+            ran += 1
+        # hitting max_steps leaves streams in flight: by default return
+        # their partial generations (marked truncated, state discarded)
+        # instead of silently dropping them -- the step that actually ran
+        # last is self._step - 1 (already advanced past it), matching
+        # mid-flight eviction's stamps.  keep_live=True keeps them live
+        # (slots + pool + drafters intact) for a later run() call.
+        if not keep_live:
+            now = time.perf_counter()
+            for rid, s in list(self._streams.items()):
+                results[rid] = self._result(
+                    s, max(self._step - 1, 0), now, truncated=True)
+                generated += len(s.generated)
+                if s.slot is not None:
+                    self._slot_rid[s.slot] = None
+                else:
+                    self.pool.free(rid)
+                del self._streams[rid]
+            self._pool_order.clear()
         wall = time.perf_counter() - t0
         ttfts = [r for r in results.values() if r.ttft_steps is not None]
         stats = EngineStats(
-            steps=step_idx,
+            steps=ran,
             n_slots=self.n_slots,
             active_slot_steps=active_slot_steps,
             max_active=max_active,
@@ -661,6 +984,13 @@ class ContinuousBatchingEngine:
             mean_stream_tokens_per_s=(
                 sum(r.tokens_per_s for r in ttfts) / len(ttfts)
                 if ttfts else 0.0),
+            policy=self.scheduler.name,
+            oversubscribe=self.oversubscribe,
+            preemptions=self._n_preempts,
+            resumes=self._n_resumes,
+            rejected=self._n_rejects,
+            peak_live=peak_live,
+            pool_state_bytes=self.pool.state_bytes_per_stream,
         )
         return results, stats
 
@@ -714,29 +1044,51 @@ def decode_single(params, qlayers, cfg, prompt, max_new_tokens: int, *,
 
 def synthetic_trace(n_requests: int, vocab_size: int, *, seed: int = 0,
                     prompt_lens: Sequence[int] = (4, 6, 8, 12),
-                    gen_lens: Sequence[int] = (4, 8, 12)) -> List[Request]:
-    """A mixed-length request workload with deterministic token content."""
+                    gen_lens: Sequence[int] = (4, 8, 12),
+                    priority_levels: Sequence[int] = (0,),
+                    arrival_span: int = 0) -> List[Request]:
+    """A mixed-length request workload with deterministic token content.
+
+    ``priority_levels`` draws each request's scheduling priority uniformly
+    from the given set; ``arrival_span > 0`` scatters arrivals uniformly
+    over engine steps ``[0, arrival_span]`` (0 keeps the closed-loop
+    everything-arrives-at-once trace).  Both default to the pre-scheduling
+    schema so existing workloads replay unchanged.
+    """
+    if arrival_span < 0:
+        raise ValueError(f"arrival_span must be >= 0, got {arrival_span}")
+    if not priority_levels:
+        raise ValueError("priority_levels must be non-empty")
     rng = np.random.default_rng(seed)
     out = []
     for rid in range(n_requests):
         p = int(rng.choice(list(prompt_lens)))
         g = int(rng.choice(list(gen_lens)))
         toks = rng.integers(0, vocab_size, size=(p,), dtype=np.int64)
+        prio = int(rng.choice(list(priority_levels)))
+        arrival = float(rng.integers(0, arrival_span + 1)) \
+            if arrival_span else 0.0
         out.append(Request(rid=rid, prompt=toks.astype(np.int32),
-                           max_new_tokens=g))
+                           max_new_tokens=g, priority=prio,
+                           arrival=arrival))
     return out
 
 
 def load_trace(path: str, vocab_size: int, *, seed: int = 0) -> List[Request]:
     """Load a request trace: a JSON list of objects with either an explicit
     ``prompt`` token list or a ``prompt_len`` (tokens drawn from ``seed``),
-    plus ``gen`` (generation budget) and optional ``id``.
+    plus ``gen`` (generation budget), optional ``id``, and the optional
+    scheduling fields ``priority`` (int, larger = more urgent) and
+    ``arrival`` (engine step >= 0 the request becomes schedulable).
 
-        [{"prompt_len": 12, "gen": 8}, {"prompt": [3, 1, 4], "gen": 4}]
+        [{"prompt_len": 12, "gen": 8, "priority": 1, "arrival": 16},
+         {"prompt": [3, 1, 4], "gen": 4}]
 
-    Malformed entries (missing keys, empty prompt, non-positive lengths or
-    budgets) raise ``ValueError`` naming the offending entry instead of
-    failing deep inside the engine.
+    One schema serves the engine CLI, the policy benchmarks, and the future
+    open-loop load generator.  Malformed entries (missing keys, empty
+    prompts, non-positive lengths or budgets, non-numeric priority,
+    negative arrival) raise ``ValueError`` naming the offending entry
+    instead of failing deep inside the engine.
     """
     with open(path) as f:
         entries = json.load(f)
@@ -772,6 +1124,18 @@ def load_trace(path: str, vocab_size: int, *, seed: int = 0) -> List[Request]:
         else:
             raise ValueError(
                 f"trace {path} entry {i}: needs 'prompt' or 'prompt_len'")
+        priority = e.get("priority", 0)
+        if isinstance(priority, bool) or not isinstance(priority, int):
+            raise ValueError(
+                f"trace {path} entry {i}: 'priority' must be an int, "
+                f"got {priority!r}")
+        arrival = e.get("arrival", 0)
+        if isinstance(arrival, bool) or \
+                not isinstance(arrival, (int, float)) or arrival < 0:
+            raise ValueError(
+                f"trace {path} entry {i}: 'arrival' must be a number >= 0, "
+                f"got {arrival!r}")
         out.append(Request(rid=int(e.get("id", i)), prompt=toks,
-                           max_new_tokens=gen))
+                           max_new_tokens=gen, priority=priority,
+                           arrival=float(arrival)))
     return out

@@ -20,7 +20,11 @@ stays bit-identical to ``--chunk 1`` and to decoding it alone.
 n-gram drafter proposes up to k continuation tokens per step and one masked
 ``(S, k+1)`` verify dispatch accepts the longest greedy-confirmed prefix
 (1..k+1 tokens emitted per slot per step), again bit-identical to
-``--speculate 0``.  The workload is either synthetic (``--requests N``) or
+``--speculate 0``.  ``--policy`` picks the slot-scheduling policy (fifo |
+priority | srf | rr | fifo-reject) and ``--oversubscribe R`` lets up to
+``ceil(R * slots)`` streams be live at once, time-multiplexed through the
+host-side integer-state pool -- every stream still bit-identical to
+decoding it alone.  The workload is either synthetic (``--requests N``) or
 a JSON trace (``--trace requests.json``, entries ``{"prompt_len"|"prompt",
 "gen", "id"?}``).  Reported metrics include mean TTFT (steps + wall-clock),
 per-stream tokens/sec, and -- under speculation -- the draft accept rate
@@ -110,11 +114,13 @@ def _serve_engine(args, cfg) -> None:
                          "a non-empty --trace)")
     eng = E.ContinuousBatchingEngine(
         params, qlayers, cfg, n_slots=args.slots, backend=args.backend,
-        chunk=args.chunk, speculate=args.speculate)
+        chunk=args.chunk, speculate=args.speculate, policy=args.policy,
+        oversubscribe=args.oversubscribe)
     eng.submit_all(requests)
     results, stats = eng.run()
     print(f"arch={cfg.name} quant=int8-lstm engine slots={args.slots} "
           f"chunk={args.chunk} speculate={args.speculate} "
+          f"policy={stats.policy} oversubscribe={stats.oversubscribe} "
           f"backend={args.backend}")
     print(f"served {len(results)}/{len(requests)} requests in "
           f"{stats.wall_s:.2f}s ({stats.steps} steps)")
@@ -124,6 +130,12 @@ def _serve_engine(args, cfg) -> None:
     print(f"mean TTFT: {stats.mean_ttft_steps:.1f} steps / "
           f"{stats.mean_ttft_s * 1e3:.1f} ms; "
           f"mean stream tokens/s: {stats.mean_stream_tokens_per_s:.1f}")
+    if stats.preemptions or stats.resumes or stats.rejected \
+            or stats.oversubscribe > 1:
+        print(f"scheduling: peak live {stats.peak_live} "
+              f"(slots={stats.n_slots}), {stats.preemptions} preemptions, "
+              f"{stats.resumes} resumes, {stats.rejected} rejected, "
+              f"{stats.pool_state_bytes} B/stream parked state")
     if args.speculate:
         print(f"speculation: accept rate {stats.accept_rate:.2f} "
               f"({stats.accepted_draft_tokens}/{stats.drafted_tokens} "
@@ -202,6 +214,19 @@ def main() -> None:
                          "step). Bit-exact vs --speculate 0; pays off on "
                          "self-repetitive streams (the drafter only knows "
                          "each stream's own history)")
+    ap.add_argument("--policy", default="fifo",
+                    help="slot-scheduling policy for --engine (fifo | "
+                         "priority | srf | rr | fifo-reject; see "
+                         "launch/scheduler.py). fifo reproduces the "
+                         "pre-scheduler engine exactly; the others may "
+                         "preempt streams to the host-side state pool and "
+                         "resume them later, bit-exactly")
+    ap.add_argument("--oversubscribe", type=float, default=1.0,
+                    help="admission headroom for --engine as a multiple of "
+                         "--slots: up to ceil(ratio * slots) streams may be "
+                         "live at once, time-multiplexed through the state "
+                         "pool by preempting policies. 1.0 (default) never "
+                         "holds more streams than slots")
     ap.add_argument("--requests", type=int, default=16,
                     help="synthetic workload size for --engine")
     ap.add_argument("--trace", default=None,
@@ -215,6 +240,12 @@ def main() -> None:
         ap.error("--chunk must be >= 1")
     if args.speculate < 0:
         ap.error("--speculate must be >= 0")
+    if args.oversubscribe < 1.0:
+        ap.error("--oversubscribe must be >= 1.0")
+    if (args.policy != "fifo" or args.oversubscribe > 1.0) \
+            and not args.engine:
+        ap.error("--policy/--oversubscribe require --engine (scheduling "
+                 "is a continuous-batching concern)")
     if args.speculate and not args.engine:
         ap.error("--speculate requires --engine (speculative decoding is a "
                  "continuous-batching program)")

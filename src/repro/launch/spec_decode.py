@@ -25,7 +25,11 @@ cost per draft.
 ``observe/draft/reset`` can slot in (e.g. a smaller integer LSTM stack
 drafting with its own fused step -- see ROADMAP follow-ons).  One drafter
 instance serves ONE stream; the engine creates a fresh instance per
-admission so no draft state ever leaks between co-tenant slots.
+stream start so no draft state ever leaks between co-tenant slots.  The
+drafter belongs to the STREAM, not the slot: when the scheduler preempts a
+stream to the state pool, its drafter travels with the stream's host
+bookkeeping and resumes with its suffix history intact -- so speculation
+quality (and the bit-exact output) survives any preemption schedule.
 """
 from __future__ import annotations
 
@@ -35,13 +39,15 @@ from typing import Dict, List, Sequence, Tuple
 class Drafter:
     """Per-stream draft-token source (the pluggable speculation interface).
 
-    Lifecycle inside the engine: ``reset()`` at slot admission, ``observe``
-    for every token the stream's history grows by (the prompt at admission,
-    then each emitted token), ``draft(k)`` once per generation step.
+    Lifecycle inside the engine: ``reset()`` when the stream starts,
+    ``observe`` for every token the stream's history grows by (the prompt
+    at start, then each emitted token), ``draft(k)`` once per generation
+    step.  Preemption does NOT reset a drafter -- the instance rides with
+    its stream through the state pool and keeps drafting on resume.
     """
 
     def reset(self) -> None:
-        """Forget all history (slot re-admission)."""
+        """Forget all history (stream start)."""
         raise NotImplementedError
 
     def observe(self, tokens: Sequence[int]) -> None:

@@ -1,0 +1,176 @@
+"""Paged host-side pool of quantized per-stream LSTM decode states.
+
+The paper's deployment pitch makes preemption nearly free: an integer
+LSTM's whole recurrent state is two small integer vectors per layer per
+stream (int8 hidden at its zero point, int16 cell) plus one int32 token
+counter -- a few KB, not a transformer KV cache that grows with context.
+Swapping a live stream out of its decode-batch slot is therefore one
+row-slice + host copy, and swapping it back in is one row write; both are
+**bit-exact** because the state is integer (no float re-rounding on the
+round trip) and every decode-batch row is computed independently of its
+neighbours.
+
+:class:`StatePool` stores those per-stream states in fixed-size **pages**
+(one page = ``page_size`` rows of every per-layer ``h``/``c`` array plus the
+``len`` counters), allocated lazily and recycled through a free list, so a
+long-lived serving process that oversubscribes its slots (more live streams
+than decode-batch rows) neither fragments host memory nor grows it per
+admission.  The pool is the mechanism behind the engine's scheduling
+policies (``launch/scheduler.py``): a scheduler *preempts* a stream by
+parking its state here and *resumes* it later into whatever slot is free,
+and the stream's tokens stay bit-identical to decoding it alone no matter
+how often it bounces.
+
+The pool is deliberately model-agnostic at the dtype level: it pages any
+``{"h": [rows...], "c": [rows...], "len": counter}`` state whose arrays
+have a leading batch axis of 1 (the shape ``models.lstm_lm.slice_state``
+produces), so a second recurrent family served through the engine reuses it
+unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["StatePool"]
+
+
+def _as_row(x) -> np.ndarray:
+    """Host copy of one state leaf, normalized to a leading batch-1 axis."""
+    a = np.asarray(x)
+    if a.ndim == 0:
+        a = a[None]
+    if a.shape[0] != 1:
+        raise ValueError(
+            f"pool rows must be batch-1 state slices, got leading dim "
+            f"{a.shape[0]} (shape {a.shape})")
+    return a
+
+
+class _Page:
+    """One page: ``page_size`` rows of every state leaf, preallocated."""
+
+    def __init__(self, template: Dict[str, Any], page_size: int):
+        self.h = [np.zeros((page_size,) + r.shape[1:], r.dtype)
+                  for r in template["h"]]
+        self.c = [np.zeros((page_size,) + r.shape[1:], r.dtype)
+                  for r in template["c"]]
+        self.len = np.zeros((page_size,), template["len"].dtype)
+
+    def write(self, row: int, state: Dict[str, Any]) -> None:
+        for dst, src in zip(self.h, state["h"]):
+            dst[row] = src[0]
+        for dst, src in zip(self.c, state["c"]):
+            dst[row] = src[0]
+        self.len[row] = state["len"][0]
+
+    def read(self, row: int) -> Dict[str, Any]:
+        return {
+            "h": [a[row:row + 1].copy() for a in self.h],
+            "c": [a[row:row + 1].copy() for a in self.c],
+            "len": self.len[row:row + 1].copy(),
+        }
+
+
+class StatePool:
+    """Paged storage of per-stream decode states, keyed by stream id.
+
+    ``put(key, state)`` parks a batch-1 state (host or device arrays; device
+    arrays are copied to host) into a free page row, allocating a new page
+    only when every existing row is taken.  ``take(key)`` returns the parked
+    state (fresh host arrays, leading batch-1 axis -- ready for
+    ``models.lstm_lm.write_quant_slot``) and recycles the row.  Misuse is a
+    ``ValueError``, not silent corruption: parking a key twice (the stream
+    is already swapped out), taking or freeing an absent key (double-resume
+    / double-free), or a row whose leading axis is not 1.
+    """
+
+    def __init__(self, page_size: int = 8):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = page_size
+        self._pages: List[_Page] = []
+        self._free: List[Tuple[int, int]] = []  # (page, row), LIFO reuse
+        self._where: Dict[Any, Tuple[int, int]] = {}
+        self._template: Optional[Dict[str, Any]] = None
+        self.peak_live = 0  # high-water mark of parked streams
+
+    # -- capacity introspection ---------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._where)
+
+    def __contains__(self, key) -> bool:
+        return key in self._where
+
+    @property
+    def n_pages(self) -> int:
+        return len(self._pages)
+
+    @property
+    def capacity(self) -> int:
+        return len(self._pages) * self.page_size
+
+    @property
+    def state_bytes_per_stream(self) -> int:
+        """Host bytes one parked stream occupies (the paper's 'tiny state'
+        claim, measurable: a few KB/stream vs a KV cache's MBs)."""
+        if self._template is None:
+            return 0
+        t = self._template
+        return int(sum(a.nbytes for a in t["h"]) +
+                   sum(a.nbytes for a in t["c"]) + t["len"].nbytes)
+
+    def location(self, key) -> Tuple[int, int]:
+        """(page, row) a key is parked at -- for tests pinning page reuse."""
+        if key not in self._where:
+            raise ValueError(f"stream {key!r} is not in the pool")
+        return self._where[key]
+
+    # -- park / resume ------------------------------------------------------
+
+    def put(self, key, state: Dict[str, Any]) -> None:
+        """Park a batch-1 state under ``key``.  O(state bytes) host copy."""
+        if key in self._where:
+            raise ValueError(
+                f"stream {key!r} is already in the pool (double swap-out)")
+        row_state = {
+            "h": [_as_row(x) for x in state["h"]],
+            "c": [_as_row(x) for x in state["c"]],
+            "len": _as_row(state["len"]),
+        }
+        if self._template is None:
+            self._template = row_state
+        if not self._free:
+            self._pages.append(_Page(self._template, self.page_size))
+            pg = len(self._pages) - 1
+            # push rows reversed so allocation order is row 0, 1, 2, ...
+            self._free.extend((pg, r)
+                              for r in reversed(range(self.page_size)))
+        loc = self._free.pop()
+        self._pages[loc[0]].write(loc[1], row_state)
+        self._where[key] = loc
+        self.peak_live = max(self.peak_live, len(self._where))
+
+    def take(self, key) -> Dict[str, Any]:
+        """Un-park ``key``'s state and recycle its row.
+
+        Raises ``ValueError`` for an absent key -- a double resume (or a
+        resume of a never-preempted stream) is a scheduler bug and must not
+        fabricate a zero state.
+        """
+        if key not in self._where:
+            raise ValueError(
+                f"stream {key!r} is not in the pool (double resume?)")
+        pg, row = self._where.pop(key)
+        state = self._pages[pg].read(row)
+        self._free.append((pg, row))
+        return state
+
+    def free(self, key) -> None:
+        """Drop a parked state without reading it (stream cancelled)."""
+        if key not in self._where:
+            raise ValueError(
+                f"stream {key!r} is not in the pool (double free?)")
+        self._free.append(self._where.pop(key))

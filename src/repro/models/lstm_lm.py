@@ -178,6 +178,26 @@ def reset_quant_slot(qlayers, states, slot):
     return {"h": h, "c": c, "len": length}
 
 
+def write_quant_slot(states, slot, row_state):
+    """Write a batch-1 state into batch row ``slot`` of a stacked state.
+
+    The resume half of preemption: ``slice_state`` (plus a host copy) parks
+    a stream's state in the pool, and this puts it back into whatever slot
+    the scheduler picked -- bit-exactly, because every leaf is integer and
+    row computations are batch-independent.  ``slot`` may be a traced int32
+    scalar: the engine jits this once and reuses it for every resume.
+    """
+    h = [h_l.at[slot].set(r[0]) for h_l, r in zip(states["h"],
+                                                  row_state["h"])]
+    c = [c_l.at[slot].set(r[0]) for c_l, r in zip(states["c"],
+                                                  row_state["c"])]
+    length = states["len"]
+    if length.ndim:
+        row_len = jnp.asarray(row_state["len"]).reshape(-1)[0]
+        length = length.at[slot].set(row_len)
+    return {"h": h, "c": c, "len": length}
+
+
 def slice_state(states, row):
     """Extract one stream's decode state as a batch-1 state (bitwise view).
 

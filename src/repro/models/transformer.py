@@ -192,7 +192,8 @@ def _moe_or_mlp(p: Dict, cfg: ArchConfig, x: jax.Array, constrain, mesh,
         )
     else:
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+
+        from repro.runtime.sharding import shard_map_compat
 
         ep = cfg.n_experts % mesh.shape["model"] == 0
         wspec = P("model", None, None) if ep else P(None, None, "model")
@@ -220,12 +221,11 @@ def _moe_or_mlp(p: Dict, cfg: ArchConfig, x: jax.Array, constrain, mesh,
                 ep_rank=rank, ep_size=ep_size, model_axis="model",
             )
 
-        y = shard_map(
+        y = shard_map_compat(
             body, mesh=mesh,
             in_specs=(P(None, None), gate_spec, up_spec, down_spec,
                       P(dp_axes, None)),
             out_specs=P(dp_axes, None),
-            check_vma=False,
         )(p["moe_router"], p["moe_gate"], p["moe_up"], p["moe_down"], tokens)
     y = y.reshape(B, S, d)
     if cfg.n_shared_experts:

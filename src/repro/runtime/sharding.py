@@ -70,6 +70,26 @@ def rules_for(profile: str) -> Dict[str, Tuple[str, ...]]:
     return PROFILES[profile]
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` across JAX API generations, replication checks off.
+
+    Newer JAX exports ``jax.shard_map`` (replication check kwarg
+    ``check_vma``); older releases only have
+    ``jax.experimental.shard_map.shard_map`` (kwarg ``check_rep``).  Every
+    shard_map body in this repo disables the check (int8-compressed psum
+    and capacity-dispatch MoE both confuse it), so one shim covers them
+    all and callers stop caring which JAX is installed.
+    """
+    try:
+        from jax import shard_map as _sm
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _sm
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+
 def resolve(
     logical: Optional[Tuple[Optional[str], ...]],
     shape: Sequence[int],
@@ -178,6 +198,24 @@ def engine_block_sharding(shape: Sequence[int], rules, mesh) -> NamedSharding:
         rules = rules_for("tiny")
     logical = ("batch",) + (None,) * (len(shape) - 1)
     return NamedSharding(mesh, resolve(logical, shape, rules, mesh))
+
+
+def pool_row_shardings(row_tree, rules, mesh) -> Any:
+    """NamedShardings for a batch-1 state-pool row being swapped back in.
+
+    A pool row is ``slice_state``'s output shape: every leaf keeps its
+    leading batch axis (of size 1), so the same logical specs that place the
+    full slot state (``engine_state_shardings``) apply verbatim -- and the
+    ``resolve`` divisibility rule necessarily drops the DP axes on the
+    size-1 batch dim, replicating the row.  Routing swap-ins through this
+    helper keeps pool pages and slot tensors on one placement policy: the
+    jitted resume write then scatters the row into the (possibly
+    DP-sharded) slot axis without the engine ever hand-picking devices.
+    """
+    if rules is None:
+        rules = rules_for("tiny")
+    specs = state_logical(row_tree)
+    return tree_shardings(specs, row_tree, rules, mesh)
 
 
 def state_logical(state_tree) -> Any:

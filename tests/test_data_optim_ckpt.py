@@ -76,8 +76,9 @@ def test_grad_compression_error_feedback_converges():
 
 def test_compressed_psum_single_device_exact():
     from jax.sharding import Mesh
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.sharding import shard_map_compat
 
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
     g = jnp.asarray(np.random.default_rng(2).standard_normal((64,)),
@@ -87,8 +88,8 @@ def test_compressed_psum_single_device_exact():
         mean, resid = grad_compress.compressed_psum(x, "data")
         return mean
 
-    out = shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
-                    check_vma=False)(g)
+    out = shard_map_compat(body, mesh=mesh, in_specs=P("data"),
+                           out_specs=P("data"))(g)
     assert float(jnp.abs(out - g).max()) < float(jnp.abs(g).max()) / 120
 
 

@@ -26,7 +26,8 @@ PREEMPT_GATE ?= 1.2
 
 .PHONY: check test collect bench prefill-bench prefill-bench-smoke \
 	engine-smoke scheduler-smoke engine-bench engine-ttft-bench \
-	spec-bench spec-bench-smoke preempt-bench preempt-bench-smoke
+	spec-bench spec-bench-smoke preempt-bench preempt-bench-smoke \
+	zoo-smoke zoo-bench zoo-bench-smoke
 
 collect:
 	$(PYTEST) -q --collect-only >/dev/null
@@ -124,3 +125,27 @@ preempt-bench-smoke:
 		--backend $(SERVE_BACKEND) --policy $(POLICY) \
 		--oversubscribe $(OVERSUB) \
 		--check-speedup $(PREEMPT_GATE) --out BENCH_preempt_smoke.json
+
+# GRU leg of the cell zoo (PR 8): serve the gru-rnnt smoke stack through
+# the unchanged continuous-batching engine, then replay the checked-in GRU
+# goldens (layer variants + LM decode + engine decode under {fifo, srf} x
+# oversubscription) -- any integer drift fails the leg
+zoo-smoke:
+	timeout 300 env PYTHONPATH=src $(PY) -m repro.launch.serve \
+		--arch gru-rnnt --smoke --quant int8-gru --engine \
+		--slots 4 --requests 8 --prompt-len 8 --gen 8 \
+		--backend $(SERVE_BACKEND)
+	timeout 1800 env PYTHONPATH=src $(PY) -m pytest -q \
+		tests/test_golden_gru.py
+
+# GRU vs LSTM sequence throughput at matched hidden size with the GRU >=
+# LSTM hard gate; writes BENCH_zoo.json
+zoo-bench:
+	PYTHONPATH=src $(PY) benchmarks/zoo_throughput.py --min-ratio 1.0
+
+# CI smoke: same gate machinery at a small shape / relaxed bar (2-core
+# runners are noisy; the real >= 1.0x gate is `make zoo-bench`)
+zoo-bench-smoke:
+	timeout 900 env PYTHONPATH=src $(PY) benchmarks/zoo_throughput.py \
+		--batch 4 --seq 32 --iters 5 --min-ratio 0.9 \
+		--out BENCH_zoo_smoke.json

@@ -42,8 +42,8 @@ from repro.launch import engine as E  # noqa: E402
 from repro.models import lstm_lm, model_zoo  # noqa: E402
 
 
-def build_quantized_lm(backend: str):
-    cfg = get_config("lstm-rnnt", smoke=True)
+def build_quantized_lm(backend: str, cell: str = "lstm"):
+    cfg = get_config(f"{cell}-rnnt", smoke=True)
     bundle = model_zoo.build(cfg)
     params, _ = bundle.init(jax.random.PRNGKey(0))
     calib = jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0,
@@ -87,6 +87,9 @@ def main() -> int:
                          "prefill-dominated)")
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "pallas", "interpret"])
+    ap.add_argument("--cell", default="lstm", choices=["lstm", "gru"],
+                    help="recurrent cell of the served stack (lstm-rnnt / "
+                         "gru-rnnt smoke config)")
     ap.add_argument("--policy", default="fifo",
                     help="engine scheduling policy (launch/scheduler.py); "
                          "every policy stays bit-exact, so the gates apply "
@@ -106,7 +109,7 @@ def main() -> int:
     # way, and that is where slot-batching pays.  --prompt-heavy flips the
     # ratio (long prompts, short generations): TTFT is then dominated by
     # teacher-forced prefill dispatches, which is where --chunk pays.
-    params, qlayers, cfg = build_quantized_lm(args.backend)
+    params, qlayers, cfg = build_quantized_lm(args.backend, args.cell)
     if args.prompt_heavy:
         prompt_lens, gen_lens = (16, 20, 24, 32), (4, 8)
     else:
@@ -144,7 +147,8 @@ def main() -> int:
 
     speedup = stats.tokens_per_s / seq_tps if seq_tps else float("inf")
     gen_tokens = sum(len(v) for v in seq_out.values())
-    print(f"engine_throughput,arch={cfg.name},backend={args.backend},"
+    print(f"engine_throughput,arch={cfg.name},cell={args.cell},"
+          f"backend={args.backend},"
           f"requests={args.requests},slots={args.slots},chunk={args.chunk},"
           f"policy={stats.policy},oversubscribe={stats.oversubscribe},"
           f"prompt_heavy={int(args.prompt_heavy)}")

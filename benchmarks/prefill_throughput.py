@@ -29,23 +29,32 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import cell as C
 from repro.core import recipe as R
 from repro.core.calibrate import Stats, TapCollector
 from repro.kernels import ops
+from repro.models import gru as GR
 from repro.models import lstm as L
 from repro.models import quant_lstm as QL
 
 
-def _quantize(variant, d_in, d_h, b, t, seed=0):
-    cfg = L.LSTMConfig(d_in, d_h, 0, variant)
-    params = L.init_lstm_params(jax.random.PRNGKey(seed), cfg)
+def _quantize(cell, d_in, d_h, b, t, seed=0):
     xs = 0.8 * jax.random.normal(jax.random.PRNGKey(seed + 1), (b, t, d_in))
     col = TapCollector()
     # calibrate on a short prefix: stats only need representative ranges
-    L.lstm_layer(params, cfg, xs[:, :4], collector=col)
+    if cell == "gru":
+        cfg = GR.GRUConfig(d_in, d_h, GR.GRUVariant())
+        params = GR.init_gru_params(jax.random.PRNGKey(seed), cfg)
+        GR.gru_layer(params, cfg, xs[:, :4], collector=col)
+        quantize_layer = R.quantize_gru_layer
+    else:
+        cfg = L.LSTMConfig(d_in, d_h, 0, L.LSTMVariant())
+        params = L.init_lstm_params(jax.random.PRNGKey(seed), cfg)
+        L.lstm_layer(params, cfg, xs[:, :4], collector=col)
+        quantize_layer = R.quantize_lstm_layer
     stats = Stats()
     stats.merge(jax.device_get(col.snapshot()))
-    arrays, spec = R.quantize_lstm_layer(params, cfg, stats)
+    arrays, spec = quantize_layer(params, cfg, stats)
     return QL.quantize_input(xs, spec.s_x, spec.zp_x), arrays, spec
 
 
@@ -61,26 +70,25 @@ def _bench_tokens_per_s(fn, arrays, xs_q, iters):
     return b * t / dt, dt
 
 
-def run(shapes, iters, backend="xla"):
+def run(shapes, iters, backend="xla", cell="lstm"):
     """Returns one result dict per (B, T, d_in, d_h) shape."""
     results = []
     for (b, t, d_in, d_h) in shapes:
-        xs_q, arrays, spec = _quantize(L.LSTMVariant(), d_in, d_h, b, t)
-        h0 = jnp.full((b, d_h), spec.zp_h_out, jnp.int8)
-        c0 = jnp.zeros((b, d_h), jnp.int16)
-        step_fn = jax.jit(lambda a, x: ops.quant_lstm_seq_stepwise(
-            a, spec, x, h0, c0, backend=backend))
-        hoist_fn = jax.jit(lambda a, x: ops.quant_lstm_seq(
-            a, spec, x, h0, c0, backend=backend))
-        ys_s, (h_s, c_s) = step_fn(arrays, xs_q)
-        ys_h, (h_h, c_h) = hoist_fn(arrays, xs_q)
-        exact = bool(jnp.array_equal(ys_s, ys_h)
-                     and jnp.array_equal(h_s, h_h)
-                     and jnp.array_equal(c_s, c_h))
+        xs_q, arrays, spec = _quantize(cell, d_in, d_h, b, t)
+        state0 = C.get_cell(spec).init_state(spec, b)
+        step_fn = jax.jit(lambda a, x: ops.quant_recurrent_seq_stepwise(
+            a, spec, x, state0, backend=backend))
+        hoist_fn = jax.jit(lambda a, x: ops.quant_recurrent_seq(
+            a, spec, x, state0, backend=backend))
+        ys_s, st_s = step_fn(arrays, xs_q)
+        ys_h, st_h = hoist_fn(arrays, xs_q)
+        exact = bool(jnp.array_equal(ys_s, ys_h)) and all(
+            bool(jnp.array_equal(a, b_)) for a, b_ in zip(st_s, st_h))
         tps_s, dt_s = _bench_tokens_per_s(step_fn, arrays, xs_q, iters)
         tps_h, dt_h = _bench_tokens_per_s(hoist_fn, arrays, xs_q, iters)
         results.append({
             "B": b, "T": t, "d_in": d_in, "d_h": d_h, "backend": backend,
+            "cell": cell,
             "stepwise_tokens_per_s": tps_s, "hoisted_tokens_per_s": tps_h,
             "stepwise_ms": dt_s * 1e3, "hoisted_ms": dt_h * 1e3,
             "speedup": tps_h / tps_s, "bitexact": exact,
@@ -101,6 +109,9 @@ def main() -> int:
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "pallas", "interpret"])
+    ap.add_argument("--cell", default="lstm", choices=["lstm", "gru"],
+                    help="recurrent cell under test (noLN/noProj topology "
+                         "either way)")
     ap.add_argument("--extra-shapes", action="store_true",
                     help="also sweep a small and a square shape")
     ap.add_argument("--check-speedup", type=float, default=None, metavar="X",
@@ -113,12 +124,13 @@ def main() -> int:
     shapes = [(args.batch, args.seq, args.d_in, args.d_h)]
     if args.extra_shapes:
         shapes += [(4, 32, 128, 64), (8, 64, 256, 256)]
-    results = run(shapes, args.iters, backend=args.backend)
+    results = run(shapes, args.iters, backend=args.backend, cell=args.cell)
 
-    print("bench/prefill,B,T,d_in,d_h,stepwise_tok_s,hoisted_tok_s,"
+    print("bench/prefill,cell,B,T,d_in,d_h,stepwise_tok_s,hoisted_tok_s,"
           "speedup,bitexact")
     for r in results:
-        print(f"bench/prefill,{r['B']},{r['T']},{r['d_in']},{r['d_h']},"
+        print(f"bench/prefill,{r['cell']},{r['B']},{r['T']},{r['d_in']},"
+              f"{r['d_h']},"
               f"{r['stepwise_tokens_per_s']:.0f},"
               f"{r['hoisted_tokens_per_s']:.0f},"
               f"{r['speedup']:.2f}x,{r['bitexact']}")
@@ -126,7 +138,8 @@ def main() -> int:
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"benchmark": "prefill_throughput",
-                       "backend": args.backend, "iters": args.iters,
+                       "backend": args.backend, "cell": args.cell,
+                       "iters": args.iters,
                        "results": results}, f, indent=2)
         print(f"bench/prefill_artifact,{args.out}")
 

@@ -1,0 +1,78 @@
+"""Cell zoo throughput: integer GRU vs LSTM at matched hidden size.
+
+The PR-8 perf gate.  Both cells run the same hoisted two-stage executor on
+the same (B, T, d_in, d_h) problem (noLN/noProj topology so the comparison
+is pure cell math); the GRU's packed GEMM is 3 gate blocks against the
+LSTM's 4 and it carries a single int8 ``h`` instead of ``(h, c)``, so its
+sequence throughput should come out at least as high.
+
+Writes ``BENCH_zoo.json`` and exits non-zero if GRU hoisted tokens/s falls
+below ``--min-ratio`` (default 1.0) times LSTM's on the primary shape.
+
+    PYTHONPATH=src python benchmarks/zoo_throughput.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from prefill_throughput import run  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--d-in", type=int, default=256)
+    ap.add_argument("--d-h", type=int, default=128)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "interpret"])
+    ap.add_argument("--min-ratio", type=float, default=1.0,
+                    help="hard gate: GRU/LSTM hoisted tokens/s must be >= "
+                         "this (exit 1 otherwise)")
+    ap.add_argument("--out", default="BENCH_zoo.json",
+                    help="JSON artifact path ('' disables)")
+    args = ap.parse_args()
+
+    shapes = [(args.batch, args.seq, args.d_in, args.d_h)]
+    by_cell = {
+        cell: run(shapes, args.iters, backend=args.backend, cell=cell)[0]
+        for cell in ("lstm", "gru")
+    }
+
+    print("bench/zoo,cell,B,T,d_in,d_h,hoisted_tok_s,stepwise_tok_s,"
+          "bitexact")
+    for cell, r in by_cell.items():
+        print(f"bench/zoo,{cell},{r['B']},{r['T']},{r['d_in']},{r['d_h']},"
+              f"{r['hoisted_tokens_per_s']:.0f},"
+              f"{r['stepwise_tokens_per_s']:.0f},{r['bitexact']}")
+
+    ratio = (by_cell["gru"]["hoisted_tokens_per_s"]
+             / by_cell["lstm"]["hoisted_tokens_per_s"])
+    print(f"bench/zoo_ratio,gru/lstm,{ratio:.2f}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"benchmark": "zoo_throughput",
+                       "backend": args.backend, "iters": args.iters,
+                       "gru_over_lstm_hoisted": ratio,
+                       "results": by_cell}, f, indent=2)
+        print(f"bench/zoo_artifact,{args.out}")
+
+    if not all(r["bitexact"] for r in by_cell.values()):
+        print("bench/zoo_gate,FAIL,bit-exactness violated")
+        return 1
+    if ratio < args.min_ratio:
+        print(f"bench/zoo_gate,FAIL,gru/lstm={ratio:.2f} < "
+              f"required {args.min_ratio:.2f}")
+        return 1
+    print(f"bench/zoo_gate,OK,gru/lstm={ratio:.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -46,6 +46,8 @@ class ArchConfig:
     # hybrid (recurrentgemma): pattern unit, e.g. ("rec", "rec", "attn")
     block_pattern: Tuple[str, ...] = ()
     d_rnn: int = 0
+    # lstm family: which QuantRecurrentCell the stack uses (lstm | gru)
+    rnn_cell: str = "lstm"
     # enc-dec / multimodal frontend stubs
     enc_layers: int = 0
     n_frontend_tokens: int = 0  # audio frames / image patches (precomputed)

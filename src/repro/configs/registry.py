@@ -131,6 +131,14 @@ CONFIGS["lstm-rnnt"] = ArchConfig(
     d_ff=0, vocab_size=4096, d_rnn=2048, shard_profile="tiny",
 )
 
+# Same stack, GRU cell: 3 packed gates, single h carry, no projection
+# (so the inter-layer width is d_rnn, not the LSTM's 640 projection).
+CONFIGS["gru-rnnt"] = ArchConfig(
+    name="gru-rnnt", family="lstm", n_layers=10, d_model=2048,
+    d_ff=0, vocab_size=4096, d_rnn=2048, rnn_cell="gru",
+    shard_profile="tiny",
+)
+
 SMOKE_CONFIGS: Dict[str, ArchConfig] = {
     k: _smoke(v) for k, v in CONFIGS.items()
 }
@@ -138,7 +146,9 @@ SMOKE_CONFIGS: Dict[str, ArchConfig] = {
 SMOKE_CONFIGS["recurrentgemma-9b"] = _smoke(
     CONFIGS["recurrentgemma-9b"], n_layers=3)
 
-ASSIGNED = tuple(k for k in CONFIGS if k != "lstm-rnnt")
+# the paper-repro recurrent LMs (family="lstm": lstm-rnnt, gru-rnnt, ...)
+# are not part of the assigned model set
+ASSIGNED = tuple(k for k in CONFIGS if CONFIGS[k].family != "lstm")
 
 
 def get_config(name: str, smoke: bool = False) -> ArchConfig:

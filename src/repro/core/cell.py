@@ -1,0 +1,161 @@
+"""``QuantRecurrentCell``: the pluggable integer recurrent cell contract.
+
+The paper's recipe (integer-only recurrence, 8-bit weights, mostly 8-bit
+activations) is not LSTM-specific, and since PR 8 neither is this stack.  A
+*cell* is described by a small static descriptor that the whole vertical
+slice -- recipe packing, the hoisted two-stage executors, the persistent
+Pallas sequence kernel, the LM wrapper, and the serving engine/state pool --
+is written against:
+
+  * **packed-weight spec** -- a quantized layer is always ``(arrays, spec)``
+    where ``arrays`` holds ``W_cat``/``R_cat``/``fold_x_cat``/``fold_hb_cat``
+    (N gate blocks column-concatenated, see ``core/recipe.py``) plus any
+    cell-specific extras (peephole/LN/projection tensors), and ``spec`` is a
+    frozen, hashable dataclass carrying every derived scale and fixed-point
+    multiplier.  ``spec.cell`` names the cell; ``get_cell(spec)`` resolves
+    its descriptor.
+  * **quantized state** -- an ordered tuple of :class:`StateLeaf` entries
+    declaring each carry tensor's pytree key, dtype, per-row width, and the
+    integer value a freshly reset row is filled with.  **Leaf 0 is the
+    cell's emitted per-step output** (the ``h`` every executor returns as
+    ``ys[t]``) -- the sequence kernels rely on this.
+  * **recurrent_step math** -- the pure-jnp one-timestep function lives in
+    ``kernels/ref.py`` (``recurrent_step_jnp`` dispatches on ``spec.cell``)
+    so one definition serves the ``xla`` scan executor and the Pallas
+    sequence kernel identically; descriptors stay import-light and carry no
+    traced code.
+  * **gate count** -- ``gate_names(spec)`` orders the packed column blocks.
+
+Registered cells: ``lstm`` (4 gates ``[i|f|z|o]``, CIFG drops ``i``; state
+``(h int8, c int16)``) and ``gru`` (3 gates ``[r|u|n]``; state ``(h int8,)``
+-- one packed GEMM and a single carry vector, cheaper than LSTM per step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "StateLeaf", "QuantRecurrentCell", "LSTMCell", "GRUCell",
+    "CELLS", "get_cell", "register_cell",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class StateLeaf:
+    """One carry tensor of a quantized recurrent state."""
+
+    key: str  # pytree key in the stacked decode state ({"h": ..., ...})
+    dtype: Any  # integer jnp dtype
+    width: int  # per-row width (trailing dim)
+    reset: int  # integer fill of a freshly reset row (e.g. the h zero point)
+
+
+class QuantRecurrentCell:
+    """Static descriptor of one integer recurrent cell topology.
+
+    Subclasses define ``name``, ``gate_names``, ``d_out``, and
+    ``state_leaves``; the concrete state helpers below are derived.  All
+    methods take the layer's quantized ``spec`` (the frozen dataclass from
+    ``core/recipe.py``) -- descriptors themselves are stateless singletons.
+    """
+
+    name: str = "?"
+    # pytree keys of state_leaves, statically known (no spec needed) so the
+    # float LM wrapper can build state dicts before quantization exists
+    state_key_names: Tuple[str, ...] = ()
+
+    def gate_names(self, spec) -> Tuple[str, ...]:
+        """Packed gate-block order (column blocks of W_cat/R_cat)."""
+        raise NotImplementedError
+
+    def d_out(self, spec) -> int:
+        """Per-step output width (== state leaf 0's width)."""
+        raise NotImplementedError
+
+    def state_leaves(self, spec) -> Tuple[StateLeaf, ...]:
+        """Ordered carry declaration; leaf 0 is the emitted output."""
+        raise NotImplementedError
+
+    # -- derived state helpers (shared by every cell) -----------------------
+
+    def state_keys(self, spec) -> Tuple[str, ...]:
+        return tuple(leaf.key for leaf in self.state_leaves(spec))
+
+    def init_state(self, spec, batch: int) -> Tuple[jnp.ndarray, ...]:
+        """t=0 carry: every leaf filled with its declared reset value."""
+        return tuple(
+            jnp.full((batch, leaf.width), leaf.reset, leaf.dtype)
+            for leaf in self.state_leaves(spec))
+
+    def reset_rows(self, spec, state: Tuple[jnp.ndarray, ...], row):
+        """Reset batch row(s) ``row`` of a stacked carry to t=0 (``row``
+        may be a traced int32 scalar -- the engine jits this)."""
+        return tuple(
+            arr.at[row].set(jnp.asarray(leaf.reset, arr.dtype))
+            for arr, leaf in zip(state, self.state_leaves(spec)))
+
+
+class LSTMCell(QuantRecurrentCell):
+    """Paper LSTM (eqs 1-7): 4 gates ``[i|f|z|o]`` (CIFG drops ``i``),
+    int8 hidden ``h`` (at the output zero point) + int16 POT cell ``c``."""
+
+    name = "lstm"
+    state_key_names = ("h", "c")
+
+    def gate_names(self, spec) -> Tuple[str, ...]:
+        return spec.variant.gates
+
+    def d_out(self, spec) -> int:
+        return spec.cfg_d_proj if spec.use_projection else spec.cfg_d_hidden
+
+    def state_leaves(self, spec) -> Tuple[StateLeaf, ...]:
+        return (
+            StateLeaf("h", jnp.int8, self.d_out(spec), spec.zp_h_out),
+            StateLeaf("c", jnp.int16, spec.cfg_d_hidden, 0),
+        )
+
+
+class GRUCell(QuantRecurrentCell):
+    """Integer GRU (cuDNN/v3 reset-after form so the packed GEMM holds):
+    3 gates ``[r|u|n]``, single int8 hidden ``h`` carry."""
+
+    name = "gru"
+    state_key_names = ("h",)
+
+    def gate_names(self, spec) -> Tuple[str, ...]:
+        return spec.gate_names
+
+    def d_out(self, spec) -> int:
+        return spec.cfg_d_hidden
+
+    def state_leaves(self, spec) -> Tuple[StateLeaf, ...]:
+        return (StateLeaf("h", jnp.int8, spec.cfg_d_hidden, spec.zp_h_out),)
+
+
+CELLS: Dict[str, QuantRecurrentCell] = {
+    "lstm": LSTMCell(),
+    "gru": GRUCell(),
+}
+
+
+def register_cell(cell: QuantRecurrentCell) -> None:
+    """Extension hook: make a new cell resolvable by ``spec.cell`` name."""
+    CELLS[cell.name] = cell
+
+
+def get_cell(spec) -> QuantRecurrentCell:
+    """Resolve a quantized layer spec's cell descriptor.
+
+    Specs predating the cell abstraction (no ``cell`` attribute) resolve to
+    LSTM; unknown names raise -- a plain raise, not ``assert``, so the check
+    survives ``python -O``.
+    """
+    name = getattr(spec, "cell", "lstm")
+    if name not in CELLS:
+        raise ValueError(
+            f"unknown recurrent cell {name!r}: registered cells are "
+            f"{sorted(CELLS)}")
+    return CELLS[name]

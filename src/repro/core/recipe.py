@@ -1,12 +1,17 @@
-"""The paper's quantization recipe (Table 2): float LSTM -> integer LSTM.
+"""The paper's quantization recipe (Table 2): float cell -> integer cell.
 
 Given calibrated ``Stats`` and float parameters, produce (a) an arrays pytree
-of integer tensors and (b) a static ``QLSTMSpec`` holding every derived scale
-and precomputed fixed-point multiplier.  All real-valued scale arithmetic
-happens HERE, offline; the integer executor in ``repro.models.quant_lstm``
-touches integers only.
+of integer tensors and (b) a static spec (``QLSTMSpec`` / ``QGRUSpec``)
+holding every derived scale and precomputed fixed-point multiplier.  All
+real-valued scale arithmetic happens HERE, offline; the integer executors in
+``repro.models.quant_lstm`` and ``repro.kernels`` touch integers only.
 
-Recipe summary (Table 2):
+The recipe is cell-agnostic (``core/cell.py``): each quantizer packs its
+cell's N gate blocks column-concatenated via ``_pack_gate_blocks`` so the
+recurrent stage is always one ``(B, d_out) x (d_out, G*H)`` int8 GEMM, and
+records per-gate fixed-point multipliers in the same ``GateSpec`` shape.
+
+Recipe summary (Table 2), LSTM row names; GRU reuses x/h/W/R/b/gate rows:
   x, h, m      int8  asymmetric  range/255 (nudged zero point)
   W, R, W_proj int8  symmetric   max/127
   P, L         int16 symmetric   max/32767
@@ -26,6 +31,7 @@ import numpy as np
 from . import fixedpoint as fp
 from . import qtypes as qt
 from .calibrate import Stats
+from repro.models.gru import GRUConfig, GRUVariant
 from repro.models.lstm import LSTMConfig, LSTMVariant
 
 MulPair = Tuple[int, int]  # (m0, shift) from fp.quantize_multiplier
@@ -64,6 +70,10 @@ class QLSTMSpec:
     s_c: float
 
     @property
+    def cell(self) -> str:
+        return "lstm"
+
+    @property
     def variant(self) -> LSTMVariant:
         return LSTMVariant(
             self.use_layernorm,
@@ -71,6 +81,14 @@ class QLSTMSpec:
             self.use_peephole,
             self.use_cifg,
         )
+
+    @property
+    def gate_names(self) -> Tuple[str, ...]:
+        return self.variant.gates
+
+    @property
+    def d_out(self) -> int:
+        return self.cfg_d_proj if self.use_projection else self.cfg_d_hidden
 
     def gate_spec(self, g: str) -> GateSpec:
         return dict(self.gates)[g]
@@ -81,8 +99,87 @@ class QLSTMSpec:
         return slice(k * self.cfg_d_hidden, (k + 1) * self.cfg_d_hidden)
 
 
+@dataclasses.dataclass(frozen=True)
+class QGRUSpec:
+    """Static (hashable) integer-execution plan for one GRU layer.
+
+    The GRU feeds its int8 hidden straight back (no projection stage), so
+    the recipe uses ONE hidden format -- the union of the recurrent-input
+    tap ``h`` and the output tap ``h_out`` -- and the carry update is exact:
+    ``u (.) h`` stays in h units (``eff_carry`` = 2**-15, no rescale error).
+    """
+
+    cfg_d_input: int
+    cfg_d_hidden: int
+    use_layernorm: bool
+    zp_x: int
+    zp_h: int
+    zp_h_out: int  # == zp_h (single hidden format); kept for API symmetry
+    gates: Tuple[Tuple[str, GateSpec], ...]  # ("r"|"u"|"n", GateSpec)
+    eff_carry: MulPair  # 2**-15       : u (.) (h - zp_h)  -> h units
+    eff_n: MulPair  # 2**-30 / s_h : (1 - u) (.) n_act -> h units
+    s_x: float
+    s_h: float
+
+    @property
+    def cell(self) -> str:
+        return "gru"
+
+    @property
+    def variant(self) -> GRUVariant:
+        return GRUVariant(self.use_layernorm)
+
+    @property
+    def gate_names(self) -> Tuple[str, ...]:
+        return tuple(g for g, _ in self.gates)
+
+    @property
+    def d_out(self) -> int:
+        return self.cfg_d_hidden
+
+    def gate_spec(self, g: str) -> GateSpec:
+        return dict(self.gates)[g]
+
+    def gate_block(self, g: str) -> slice:
+        """Column block of gate ``g`` inside the packed [r|u|n] arrays."""
+        k = self.gate_names.index(g)
+        return slice(k * self.cfg_d_hidden, (k + 1) * self.cfg_d_hidden)
+
+
 def _np(x) -> np.ndarray:
     return np.asarray(x, np.float64)
+
+
+def _i32(x) -> np.ndarray:
+    return np.clip(x, -(2**31 - 1), 2**31 - 1).astype(np.int32)
+
+
+def _pack_gate_blocks(
+    arrays: Dict[str, Any],
+    per_gate: Dict[str, Dict[str, np.ndarray]],
+    gate_order: Tuple[str, ...],
+) -> None:
+    """Column-concatenate N per-gate blocks into the fused executor layout.
+
+    The gate weights are stored ONLY concatenated, so one
+    (B, d_in) x (d_in, G*H) int8 MXU matmul produces every gate accumulator
+    at once; slicing column block g (``spec.gate_block``) is bit-identical
+    to the per-gate matmul, so reference executors read the same buffers and
+    the model stays at its Table-1 size.  ``gate_order`` is the cell's gate
+    tuple (LSTM [i|f|z|o] minus CIFG's "i"; GRU [r|u|n]).
+    """
+    arrays["W_cat"] = jnp.asarray(
+        np.concatenate([per_gate["W"][g] for g in gate_order], axis=1)
+    )
+    arrays["R_cat"] = jnp.asarray(
+        np.concatenate([per_gate["R"][g] for g in gate_order], axis=1)
+    )
+    arrays["fold_x_cat"] = jnp.asarray(
+        np.concatenate([per_gate["fold_x"][g] for g in gate_order])
+    )
+    arrays["fold_hb_cat"] = jnp.asarray(
+        np.concatenate([per_gate["fold_hb"][g] for g in gate_order])
+    )
 
 
 def quantize_lstm_layer(
@@ -102,12 +199,24 @@ def quantize_lstm_layer(
 
     # --- activations (asymmetric int8) and cell (POT int16) ----------------
     s_x, zp_x = qt.asymmetric_scale_zp(*rng("x"), 8)
-    s_h, zp_h = qt.asymmetric_scale_zp(*rng("h"), 8)
-    s_m, zp_m = qt.asymmetric_scale_zp(*rng("m"), 8)
+    # ONE hidden format for the recurrence: the h the gates consume IS last
+    # step's emitted output, so its int8 coding must be the coding the
+    # output was written in.  Deriving them from their own taps ("h" vs
+    # "h_out"/"m") yields two near-equal scales with DIFFERENT nudged zero
+    # points, and the systematic zp offset compounds over the scan (worst
+    # on the *-Proj-PH-CIFG variants).  Union the input and output tap
+    # ranges instead: both formats come out identical and the feedback is
+    # exact by construction.
+    lo_in, hi_in = rng("h")
+    lo_out, hi_out = rng("h_out" if v.use_projection else "m")
+    s_h, zp_h = qt.asymmetric_scale_zp(min(lo_in, lo_out),
+                                       max(hi_in, hi_out), 8)
     if v.use_projection:
-        s_hout, zp_hout = qt.asymmetric_scale_zp(*rng("h_out"), 8)
+        s_m, zp_m = qt.asymmetric_scale_zp(*rng("m"), 8)
     else:
-        s_hout, zp_hout = s_m, zp_m
+        # no projection: m IS the emitted h, so it shares the union format
+        s_m, zp_m = s_h, zp_h
+    s_hout, zp_hout = s_h, zp_h
     s_c = qt.pot_scale_for(max_abs("c"), 16)
     m_c = 15 - int(round(-np.log2(s_c)))  # integer bits of Q_{m.15-m}
     m_c = max(m_c, 0)
@@ -183,25 +292,7 @@ def quantize_lstm_layer(
             )
         )
 
-    # --- packed [i|f|z|o] blocks (fused executor, fig 10-12) ---------------
-    # The gate weights are stored ONLY column-concatenated, so one
-    # (B, d_in) x (d_in, G*H) int8 MXU matmul produces every gate
-    # accumulator at once; slicing column block g (``spec.gate_block``) is
-    # bit-identical to the per-gate matmul, so the reference executor reads
-    # the same buffers and the model stays at its Table-1 size.  Gate order
-    # follows ``v.gates`` (CIFG drops the "i" block).
-    arrays["W_cat"] = jnp.asarray(
-        np.concatenate([per_gate["W"][g] for g in v.gates], axis=1)
-    )
-    arrays["R_cat"] = jnp.asarray(
-        np.concatenate([per_gate["R"][g] for g in v.gates], axis=1)
-    )
-    arrays["fold_x_cat"] = jnp.asarray(
-        np.concatenate([per_gate["fold_x"][g] for g in v.gates])
-    )
-    arrays["fold_hb_cat"] = jnp.asarray(
-        np.concatenate([per_gate["fold_hb"][g] for g in v.gates])
-    )
+    _pack_gate_blocks(arrays, per_gate, v.gates)
 
     eff_proj = None
     if v.use_projection:
@@ -242,20 +333,132 @@ def quantize_lstm_layer(
     return arrays, spec
 
 
-def recipe_table(spec: QLSTMSpec) -> Dict[str, str]:
+def quantize_gru_layer(
+    params: Dict[str, Any],
+    cfg: GRUConfig,
+    stats: Stats,
+    prefix: str = "",
+) -> Tuple[Dict[str, Any], QGRUSpec]:
+    """Apply Table 2 to one GRU layer.  Returns (integer arrays, static spec).
+
+    Same recipe rows as the LSTM (int8 asym activations, int8 sym weights,
+    Q3.12 gates without LN / measured 16-bit gates with LN, biases folded
+    into the recurrent accumulator), specialized to the reset-after GRU:
+
+      r, u  : sigmoid_q15(rescale(acc_x) + rescale(acc_h))      [LN'd first]
+      n     : tanh_q15(rescale(acc_x_n) + rdp(r * rescale(acc_h_n), 15))
+      h'    : sat8(mbqm(u*(h - zp_h), 2**-15)
+                   + mbqm((2**15 - u)*n, 2**-30/s_h) + zp_h)
+
+    The hidden format is the UNION of the ``h`` and ``h_out`` tap ranges so
+    the fed-back int8 code and the recurrent folding share one (s, zp) --
+    the carry term ``u (.) h`` then needs no real-valued rescale at all.
+    """
+    v = cfg.variant
+
+    def rng(name):
+        return stats.range(prefix + name)
+
+    def max_abs(name):
+        return stats.max_abs(prefix + name)
+
+    # --- activations: one hidden format for input AND output taps ----------
+    s_x, zp_x = qt.asymmetric_scale_zp(*rng("x"), 8)
+    lo_in, hi_in = rng("h")
+    lo_out, hi_out = rng("h_out")
+    s_h, zp_h = qt.asymmetric_scale_zp(min(lo_in, lo_out), max(hi_in, hi_out), 8)
+
+    arrays: Dict[str, Any] = {}
+    per_gate: Dict[str, Dict[str, np.ndarray]] = {
+        "W": {}, "R": {}, "fold_x": {}, "fold_hb": {}
+    }
+    gate_specs = []
+
+    for g in v.gates:
+        W = _np(params["W"][g])
+        R = _np(params["R"][g])
+        b = _np(params["b"][g])
+        s_W = qt.symmetric_scale(np.abs(W).max(), 8)
+        s_R = qt.symmetric_scale(np.abs(R).max(), 8)
+        Wq = np.clip(np.round(W / s_W), -127, 127).astype(np.int8)
+        Rq = np.clip(np.round(R / s_R), -127, 127).astype(np.int8)
+        per_gate["W"][g] = Wq
+        per_gate["R"][g] = Rq
+
+        # gate output scale: Q3.12 without LN, measured/32767 with LN
+        if v.use_layernorm:
+            s_gate = qt.symmetric_scale(max_abs(f"g_{g}"), 16)
+        else:
+            s_gate = 2.0**-12
+
+        # zero-point folding (sec 6): W(x - zp) == Wx - colsum(W)*zp
+        per_gate["fold_x"][g] = _i32(
+            -Wq.astype(np.int64).sum(axis=0) * zp_x)
+        fold_h = -Rq.astype(np.int64).sum(axis=0) * zp_h
+        if not v.use_layernorm:
+            # bias carried at s_R*s_h into the recurrent accumulator; for
+            # gate "n" this sits INSIDE the reset product (reset-after form)
+            fold_h = fold_h + np.round(b / (s_R * s_h))
+        per_gate["fold_hb"][g] = _i32(fold_h)
+
+        ln_out = None
+        if v.use_layernorm:
+            L = _np(params["L"][g])
+            s_L = qt.symmetric_scale(np.abs(L).max(), 16)
+            Lq = np.clip(np.round(L / s_L), -32767, 32767).astype(np.int16)
+            arrays.setdefault("L", {})[g] = jnp.asarray(Lq)
+            # LN bias at 2**-10 * s_L (Table 2)
+            lbq = _i32(np.round(b / (2.0**-10 * s_L)))
+            arrays.setdefault("Lb", {})[g] = jnp.asarray(lbq, jnp.int32)
+            ln_out = fp.quantize_multiplier(2.0**-10 * s_L / 2.0**-12)
+
+        gate_specs.append(
+            (
+                g,
+                GateSpec(
+                    eff_x=fp.quantize_multiplier(s_W * s_x / s_gate),
+                    eff_h=fp.quantize_multiplier(s_R * s_h / s_gate),
+                    eff_c=None,
+                    ln_out=ln_out,
+                ),
+            )
+        )
+
+    _pack_gate_blocks(arrays, per_gate, v.gates)
+
+    spec = QGRUSpec(
+        cfg_d_input=cfg.d_input,
+        cfg_d_hidden=cfg.d_hidden,
+        use_layernorm=v.use_layernorm,
+        zp_x=zp_x,
+        zp_h=zp_h,
+        zp_h_out=zp_h,
+        gates=tuple(gate_specs),
+        eff_carry=fp.quantize_multiplier(2.0**-15),
+        eff_n=fp.quantize_multiplier(2.0**-30 / s_h),
+        s_x=s_x,
+        s_h=s_h,
+    )
+    return arrays, spec
+
+
+def recipe_table(spec) -> Dict[str, str]:
     """Human-readable Table-2 row dump for one quantized layer (benchmarks)."""
     rows = {
         "x": f"int8 asym s={spec.s_x:.3e} zp={spec.zp_x}",
         "h": f"int8 asym s={spec.s_h:.3e} zp={spec.zp_h}",
-        "m": f"int8 asym s={spec.s_m:.3e} zp={spec.zp_m}",
-        "c": f"int16 POT s={spec.s_c:.3e} (Q{spec.cell_int_bits}."
-        f"{15 - spec.cell_int_bits})",
     }
+    if spec.cell == "lstm":
+        rows["m"] = f"int8 asym s={spec.s_m:.3e} zp={spec.zp_m}"
+        rows["c"] = (
+            f"int16 POT s={spec.s_c:.3e} (Q{spec.cell_int_bits}."
+            f"{15 - spec.cell_int_bits})"
+        )
     for g, gs in spec.gates:
         rows[f"gate_{g}"] = (
             f"eff_x={gs.eff_x} eff_h={gs.eff_h} eff_c={gs.eff_c} "
             f"ln_out={gs.ln_out}"
         )
-    if spec.eff_proj:
+    if getattr(spec, "eff_proj", None):
         rows["proj"] = f"eff={spec.eff_proj}"
     return rows

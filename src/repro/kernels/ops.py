@@ -10,27 +10,33 @@ Backends:
 Select globally via ``set_backend`` or per-call with ``backend=``.
 
 Besides the per-kernel wrappers this module hosts the **fused sequence-level
-integer LSTM executors**.  Since PR 4 they run in two stages:
+integer recurrent executors** -- cell-agnostic since PR 8
+(``core/cell.py``): a quantized layer is ``(arrays, spec)`` with
+``spec.cell`` naming the cell, and its state is the flat tuple declared by
+``cell.state_leaves(spec)``.  They run in two stages (PR 4 structure):
 
-  1. **input-projection stage** (``quant_lstm_input_proj``): the whole
+  1. **input-projection stage** (``quant_recurrent_input_proj``): the whole
      sequence's input product ``reshape(xs_q, (B*T, d_in)) @ W_cat +
      fold_x_cat`` as ONE time-batched int8 MXU GEMM -- it does not depend on
      the scan carry, and integer arithmetic makes hoisting it out of the
      recurrent loop bit-exact by construction;
-  2. **recurrent stage** (``quant_lstm_recurrent_step``): per timestep, one
+  2. **recurrent stage** (``quant_recurrent_step``): per timestep, one
      packed ``(B, d_out) x (d_out, G*H)`` recurrent matmul over the
-     ``[i|f|z|o]`` column-concatenated weights from ``core/recipe.py`` plus
-     the fused ``quant_lstm_cell`` elementwise update, consuming the
-     per-step ``(B, G*H)`` int32 slice of the hoisted accumulator.
+     column-concatenated gate weights from ``core/recipe.py`` (LSTM
+     ``[i|f|z|o]``, GRU ``[r|u|n]``) plus the cell's elementwise update,
+     consuming the per-step ``(B, G*H)`` int32 slice of the hoisted
+     accumulator.
 
-``quant_lstm_seq`` / ``quant_lstm_seq_masked`` lower the recurrent stage as
-a ``lax.scan`` on the ``xla`` backend and as the **persistent Pallas
-sequence kernel** (``kernels/quant_lstm_scan.py``: one ``pallas_call``
-looping over T with ``(h, c)`` resident in VMEM scratch) on ``pallas`` /
-``pallas_interpret``.  ``quant_lstm_seq_stepwise`` keeps the pre-hoist
-executor (input GEMM inside the scan body) as the baseline that tests and
+``quant_recurrent_seq`` / ``quant_recurrent_seq_masked`` lower the
+recurrent stage as a ``lax.scan`` on the ``xla`` backend and as the
+**persistent Pallas sequence kernel** (``kernels/quant_lstm_scan.py``: one
+``pallas_call`` looping over T with the state tuple resident in VMEM
+scratch) on ``pallas`` / ``pallas_interpret``.
+``quant_recurrent_seq_stepwise`` keeps the pre-hoist executor (input GEMM
+inside the scan body) as the baseline that tests and
 ``benchmarks/prefill_throughput.py`` compare against -- all paths are
-bit-identical.
+bit-identical.  The ``quant_lstm_*`` names are kept as LSTM-shaped wrappers
+threading ``(h0, c0)`` explicitly.
 """
 from __future__ import annotations
 
@@ -46,7 +52,7 @@ from . import ref
 from .int8_matmul import int8_matmul_pallas
 from .int_layernorm import int_layernorm_pallas
 from .quant_lstm_cell import quant_lstm_cell_pallas
-from .quant_lstm_scan import quant_lstm_seq_scan_pallas
+from .quant_lstm_scan import quant_recurrent_seq_scan_pallas
 
 _BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "xla")
 _VALID = ("xla", "pallas", "pallas_interpret")
@@ -148,20 +154,21 @@ def int_layernorm(
 
 
 # ---------------------------------------------------------------------------
-# Fused sequence-level integer LSTM executor (packed [i|f|z|o] matmuls),
+# Fused sequence-level integer recurrent executors (packed gate matmuls),
 # two-stage since PR 4: hoisted time-batched input GEMM -> recurrent scan.
+# Cell-agnostic since PR 8: state is the flat tuple from core/cell.py.
 # ---------------------------------------------------------------------------
 
 
-def _empty_seq(xs_q, h0_q, c0_q):
+def _empty_seq(xs_q, state0):
     """T == 0 result: no outputs, initial carry (a grid=(0,) pallas_call
     would never write its final-state blocks, so short-circuit uniformly)."""
     B = xs_q.shape[0]
-    ys = jnp.zeros((B, 0, h0_q.shape[-1]), h0_q.dtype)
-    return ys, (h0_q, c0_q)
+    ys = jnp.zeros((B, 0, state0[0].shape[-1]), state0[0].dtype)
+    return ys, tuple(state0)
 
 
-def quant_lstm_input_proj(
+def quant_recurrent_input_proj(
     arrays: Dict[str, Any],
     xs_q: jax.Array,  # int8 (B, T, d_in)
 ) -> jax.Array:
@@ -173,7 +180,8 @@ def quant_lstm_input_proj(
     under any batching, so slicing step t of this tensor is bit-identical to
     the per-step matmul the pre-hoist executor ran inside the scan -- while
     raising the GEMM's arithmetic intensity from one ``(B, d_in)`` row-block
-    per dispatch to the full ``(B*T, d_in)`` sequence.
+    per dispatch to the full ``(B*T, d_in)`` sequence.  The packed layout is
+    the same for every cell, so this stage needs no dispatch at all.
     """
     B, T, d_in = xs_q.shape
     GH = arrays["W_cat"].shape[1]  # explicit: reshape(-1) rejects T == 0
@@ -181,6 +189,26 @@ def quant_lstm_input_proj(
         xs_q.reshape(B * T, d_in), arrays["W_cat"]
     ) + arrays["fold_x_cat"]
     return acc.reshape(B, T, GH)
+
+
+quant_lstm_input_proj = quant_recurrent_input_proj  # pre-PR-8 name
+
+
+def _cell_recurrent_step(arrays, spec, acc_x_t, state, backend, block_kw):
+    """One cell step from the hoisted accumulator slice -> new state tuple.
+
+    The LSTM routes through ``quant_lstm_recurrent_step`` so its fused
+    elementwise cell kernel still honours per-call backend dispatch on the
+    ``xla``-scan path; other cells run ``ref.recurrent_step_jnp`` directly
+    (their ``pallas`` lowering is the persistent sequence kernel, which
+    traces the very same function).
+    """
+    if getattr(spec, "cell", "lstm") == "lstm":
+        h, c = quant_lstm_recurrent_step(
+            arrays, spec, acc_x_t, state[0], state[1],
+            backend=backend, **block_kw)
+        return (h, c)
+    return ref.recurrent_step_jnp(arrays, spec, acc_x_t, state)
 
 
 def quant_lstm_recurrent_step(
@@ -213,6 +241,147 @@ def quant_lstm_recurrent_step(
     return ref.lstm_project_jnp(arrays, spec, m_q), c_new
 
 
+def quant_recurrent_step(
+    arrays: Dict[str, Any],
+    spec,  # core.recipe.Q*Spec (static, names the cell)
+    x_q: jax.Array,  # int8 (B, d_in)
+    state: Tuple[jax.Array, ...],  # per cell.state_leaves(spec)
+    *,
+    backend: Optional[str] = None,
+    **block_kw,
+) -> Tuple[jax.Array, ...]:
+    """One fused integer recurrent timestep: 2 packed matmuls + cell update.
+
+    The single-token (decode) entry point for any registered cell:
+    input-projection and recurrent stages run back to back on one
+    ``(B, d_in)`` token block.  Returns the new state tuple; leaf 0 is the
+    emitted output.
+    """
+    b = _resolve(backend)
+    acc_x = iops.matmul_i8_i32(x_q, arrays["W_cat"]) + arrays["fold_x_cat"]
+    return _cell_recurrent_step(arrays, spec, acc_x, tuple(state), b, block_kw)
+
+
+def quant_recurrent_seq(
+    arrays: Dict[str, Any],
+    spec,
+    xs_q: jax.Array,  # int8 (B, T, d_in)
+    state0: Tuple[jax.Array, ...],
+    *,
+    backend: Optional[str] = None,
+    **block_kw,
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """Hoisted sequence executor: int8 (B, T, d_in) -> (B, T, d_out).
+
+    Stage 1 runs the whole sequence's input GEMM once
+    (``quant_recurrent_input_proj``); stage 2 consumes per-step ``(B, G*H)``
+    slices -- as a ``lax.scan`` of the cell step on the ``xla`` backend, or
+    as the persistent Pallas sequence kernel (one ``pallas_call`` looping
+    over T with the state tuple in VMEM scratch) on ``pallas`` /
+    ``pallas_interpret``.  All lowerings are bit-identical to
+    ``quant_recurrent_seq_stepwise`` (``block_kw`` only reaches the LSTM's
+    per-step cell kernel on that path; the sequence kernel ignores it).
+    """
+    b = _resolve(backend)
+    state0 = tuple(state0)
+    if xs_q.shape[1] == 0:  # empty sequence: carry unchanged, like the scan
+        return _empty_seq(xs_q, state0)
+    acc_x_all = quant_recurrent_input_proj(arrays, xs_q)
+    if b != "xla":
+        return quant_recurrent_seq_scan_pallas(
+            arrays, spec, acc_x_all, state0,
+            interpret=(b == "pallas_interpret"))
+
+    def step(carry, acc_t):
+        new = _cell_recurrent_step(arrays, spec, acc_t, carry, b, block_kw)
+        return new, new[0]
+
+    state, ys = jax.lax.scan(step, state0, jnp.swapaxes(acc_x_all, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), state
+
+
+def quant_recurrent_seq_stepwise(
+    arrays: Dict[str, Any],
+    spec,
+    xs_q: jax.Array,  # int8 (B, T, d_in)
+    state0: Tuple[jax.Array, ...],
+    *,
+    backend: Optional[str] = None,
+    **block_kw,
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """Pre-hoist executor: scan ``quant_recurrent_step`` with the input GEMM
+    inside the scan body (one small ``(B, d_in)`` matmul per step).
+
+    Kept as the baseline the hoisted executors are tested bit-exact against
+    and benchmarked over (``benchmarks/prefill_throughput.py``); not on any
+    serving path.
+    """
+    b = _resolve(backend)
+
+    def step(carry, x_t):
+        new = quant_recurrent_step(
+            arrays, spec, x_t, carry, backend=b, **block_kw)
+        return new, new[0]
+
+    state, ys = jax.lax.scan(
+        step, tuple(state0), jnp.swapaxes(xs_q, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), state
+
+
+def quant_recurrent_seq_masked(
+    arrays: Dict[str, Any],
+    spec,
+    xs_q: jax.Array,  # int8 (B, T, d_in)
+    state0: Tuple[jax.Array, ...],
+    valid_len: jax.Array,  # int32 (B,), per-row number of live timesteps
+    *,
+    backend: Optional[str] = None,
+    **block_kw,
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """Ragged-length fused executor: row b advances only for t < valid_len[b].
+
+    The chunked-prefill workhorse: a ``(B, K)`` token block where every row
+    owns a different number of real tokens (a slot mid-generation feeds 1, a
+    slot with 3 prompt tokens left feeds 3, an empty slot feeds 0).  The
+    input GEMM is hoisted exactly as in ``quant_recurrent_seq`` (dead
+    positions burn GEMM flops on stale inputs, but their results are
+    discarded, which is what keeps the program shape static); each recurrent
+    step then freezes every state leaf for rows already past their valid
+    length, so a row's state trajectory is **bitwise identical** to feeding
+    its valid prefix one token at a time -- rows are computed independently
+    (per-row matmuls, LN reduces over hidden only) and ``where`` with a true
+    mask returns the new value unchanged.  As in ``quant_recurrent_seq``,
+    ``block_kw`` only reaches the LSTM's per-step cell kernel on the ``xla``
+    scan path; the sequence kernel ignores it.
+    """
+    b = _resolve(backend)
+    state0 = tuple(state0)
+    if xs_q.shape[1] == 0:  # empty sequence: carry unchanged, like the scan
+        return _empty_seq(xs_q, state0)
+    acc_x_all = quant_recurrent_input_proj(arrays, xs_q)
+    if b != "xla":
+        return quant_recurrent_seq_scan_pallas(
+            arrays, spec, acc_x_all, state0, valid_len,
+            interpret=(b == "pallas_interpret"))
+
+    def step(carry, inp):
+        acc_t, t = inp
+        new = _cell_recurrent_step(arrays, spec, acc_t, carry, b, block_kw)
+        live = (t < valid_len)[:, None]
+        frozen = tuple(
+            jnp.where(live, n, o) for n, o in zip(new, carry))
+        return frozen, frozen[0]
+
+    T = xs_q.shape[1]
+    ts = jnp.arange(T, dtype=valid_len.dtype)
+    state, ys = jax.lax.scan(
+        step, state0, (jnp.swapaxes(acc_x_all, 0, 1), ts))
+    return jnp.swapaxes(ys, 0, 1), state
+
+
+# -- LSTM-shaped wrappers (pre-PR-8 signatures, thread (h0, c0) explicitly) --
+
+
 def quant_lstm_step(
     arrays: Dict[str, Any],
     spec,  # core.recipe.QLSTMSpec (static)
@@ -223,14 +392,10 @@ def quant_lstm_step(
     backend: Optional[str] = None,
     **block_kw,
 ) -> Tuple[jax.Array, jax.Array]:
-    """One fused integer LSTM timestep: 2 packed matmuls + fused cell.
-
-    The single-token (decode) entry point: input-projection and recurrent
-    stages run back to back on one ``(B, d_in)`` token block.
-    """
-    acc_x = iops.matmul_i8_i32(x_q, arrays["W_cat"]) + arrays["fold_x_cat"]
-    return quant_lstm_recurrent_step(
-        arrays, spec, acc_x, h_q, c_q, backend=backend, **block_kw)
+    """One fused integer LSTM timestep: 2 packed matmuls + fused cell."""
+    h, c = quant_recurrent_step(
+        arrays, spec, x_q, (h_q, c_q), backend=backend, **block_kw)
+    return h, c
 
 
 def quant_lstm_seq(
@@ -243,36 +408,9 @@ def quant_lstm_seq(
     backend: Optional[str] = None,
     **block_kw,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """Hoisted sequence executor: int8 (B, T, d_in) -> (B, T, d_out).
-
-    Stage 1 runs the whole sequence's input GEMM once
-    (``quant_lstm_input_proj``); stage 2 consumes per-step ``(B, G*H)``
-    slices -- as a ``lax.scan`` of ``quant_lstm_recurrent_step`` on the
-    ``xla`` backend, or as the persistent Pallas sequence kernel (one
-    ``pallas_call`` looping over T with ``(h, c)`` in VMEM scratch) on
-    ``pallas`` / ``pallas_interpret``.  All lowerings are bit-identical to
-    ``quant_lstm_seq_stepwise`` (``block_kw`` only reaches the per-step
-    cell kernel on that path; the sequence kernel ignores it).
-    """
-    b = _resolve(backend)
-    if xs_q.shape[1] == 0:  # empty sequence: carry unchanged, like the scan
-        return _empty_seq(xs_q, h0_q, c0_q)
-    acc_x_all = quant_lstm_input_proj(arrays, xs_q)
-    if b != "xla":
-        return quant_lstm_seq_scan_pallas(
-            arrays, spec, acc_x_all, h0_q, c0_q,
-            interpret=(b == "pallas_interpret"))
-
-    def step(carry, acc_t):
-        h, c = carry
-        h, c = quant_lstm_recurrent_step(
-            arrays, spec, acc_t, h, c, backend=b, **block_kw
-        )
-        return (h, c), h
-
-    (h, c), ys = jax.lax.scan(
-        step, (h0_q, c0_q), jnp.swapaxes(acc_x_all, 0, 1))
-    return jnp.swapaxes(ys, 0, 1), (h, c)
+    """Hoisted LSTM sequence executor (see ``quant_recurrent_seq``)."""
+    return quant_recurrent_seq(
+        arrays, spec, xs_q, (h0_q, c0_q), backend=backend, **block_kw)
 
 
 def quant_lstm_seq_stepwise(
@@ -285,24 +423,9 @@ def quant_lstm_seq_stepwise(
     backend: Optional[str] = None,
     **block_kw,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """Pre-hoist executor: scan ``quant_lstm_step`` with the input GEMM
-    inside the scan body (one small ``(B, d_in)`` matmul per step).
-
-    Kept as the baseline the hoisted executors are tested bit-exact against
-    and benchmarked over (``benchmarks/prefill_throughput.py``); not on any
-    serving path.
-    """
-    b = _resolve(backend)
-
-    def step(carry, x_t):
-        h, c = carry
-        h, c = quant_lstm_step(
-            arrays, spec, x_t, h, c, backend=b, **block_kw
-        )
-        return (h, c), h
-
-    (h, c), ys = jax.lax.scan(step, (h0_q, c0_q), jnp.swapaxes(xs_q, 0, 1))
-    return jnp.swapaxes(ys, 0, 1), (h, c)
+    """Pre-hoist LSTM executor (see ``quant_recurrent_seq_stepwise``)."""
+    return quant_recurrent_seq_stepwise(
+        arrays, spec, xs_q, (h0_q, c0_q), backend=backend, **block_kw)
 
 
 def quant_lstm_seq_masked(
@@ -316,44 +439,7 @@ def quant_lstm_seq_masked(
     backend: Optional[str] = None,
     **block_kw,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """Ragged-length fused executor: row b advances only for t < valid_len[b].
-
-    The chunked-prefill workhorse: a ``(B, K)`` token block where every row
-    owns a different number of real tokens (a slot mid-generation feeds 1, a
-    slot with 3 prompt tokens left feeds 3, an empty slot feeds 0).  The
-    input GEMM is hoisted exactly as in ``quant_lstm_seq`` (dead positions
-    burn GEMM flops on stale inputs, but their results are discarded, which
-    is what keeps the program shape static); each recurrent step then
-    freezes ``(h, c)`` for rows already past their valid length, so a row's
-    state trajectory is **bitwise identical** to feeding its valid prefix one
-    token at a time -- rows are computed independently (per-row matmuls, LN
-    reduces over hidden only) and ``where`` with a true mask returns the new
-    value unchanged.  As in ``quant_lstm_seq``, ``block_kw`` only reaches
-    the per-step cell kernel on the ``xla`` scan path; the sequence kernel
-    ignores it.
-    """
-    b = _resolve(backend)
-    if xs_q.shape[1] == 0:  # empty sequence: carry unchanged, like the scan
-        return _empty_seq(xs_q, h0_q, c0_q)
-    acc_x_all = quant_lstm_input_proj(arrays, xs_q)
-    if b != "xla":
-        return quant_lstm_seq_scan_pallas(
-            arrays, spec, acc_x_all, h0_q, c0_q, valid_len,
-            interpret=(b == "pallas_interpret"))
-
-    def step(carry, inp):
-        h, c = carry
-        acc_t, t = inp
-        h_new, c_new = quant_lstm_recurrent_step(
-            arrays, spec, acc_t, h, c, backend=b, **block_kw
-        )
-        live = (t < valid_len)[:, None]
-        h = jnp.where(live, h_new, h)
-        c = jnp.where(live, c_new, c)
-        return (h, c), h
-
-    T = xs_q.shape[1]
-    ts = jnp.arange(T, dtype=valid_len.dtype)
-    (h, c), ys = jax.lax.scan(
-        step, (h0_q, c0_q), (jnp.swapaxes(acc_x_all, 0, 1), ts))
-    return jnp.swapaxes(ys, 0, 1), (h, c)
+    """Ragged-length LSTM executor (see ``quant_recurrent_seq_masked``)."""
+    return quant_recurrent_seq_masked(
+        arrays, spec, xs_q, (h0_q, c0_q), valid_len,
+        backend=backend, **block_kw)

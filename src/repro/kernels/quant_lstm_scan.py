@@ -1,31 +1,37 @@
-"""Persistent Pallas sequence kernel: the integer LSTM recurrent stage.
+"""Persistent Pallas sequence kernel: the integer recurrent stage, any cell.
 
 One ``pallas_call`` runs the ENTIRE sequence: the grid is ``(T,)`` (TPU grid
-iteration is sequential), the packed recurrent weights / peephole / LN /
-projection parameters are mapped to constant-index blocks so they stay
-resident in VMEM across steps, and the ``(h, c)`` carry lives in VMEM
-scratch for the whole sweep.  Each grid step fuses
+iteration is sequential), every recurrent-stage array (packed weights,
+peephole / LN / projection parameters -- whatever the cell's quantizer
+emitted) is mapped to a constant-index block so it stays resident in VMEM
+across steps, and the cell's flat state tuple (``core/cell.py``:
+``state_leaves``) lives in VMEM scratch for the whole sweep -- one scratch
+buffer per leaf, seeded at ``t == 0``.  Each grid step fuses
 
     recurrent matmul (int8 MXU)  ->  per-gate fixed-point rescales
-    [-> integer LayerNorm / peephole]  ->  fused cell update
+    [-> integer LayerNorm / peephole]  ->  cell update
     [-> projection matmul]  ->  write ys[t], update the carry
 
-which eliminates the per-timestep dispatch overhead and the per-step h/c
+which eliminates the per-timestep dispatch overhead and the per-step state
 HBM round-trips the scan-of-steps executor pays: between consecutive
 timesteps nothing leaves VMEM.  The input-dependent work arrives
 precomputed -- the kernel consumes per-step ``(B, 1, G*H)`` int32 blocks of
-the hoisted time-batched input GEMM (``ops.quant_lstm_input_proj``), so the
-only matmul on the critical scan path is the genuinely sequential
+the hoisted time-batched input GEMM (``ops.quant_recurrent_input_proj``),
+so the only matmul on the critical scan path is the genuinely sequential
 ``h_{t-1} @ R_cat`` product.
 
-The step math is ``ref.quant_lstm_recurrent_jnp`` -- the same function the
+The step math is ``ref.recurrent_step_jnp`` -- the same cell dispatch the
 ``xla`` scan executor runs -- traced inside the kernel body, so the two
 lowerings are bit-identical by construction (integer ops only; validated
-against the goldens and the per-gate reference for all 16 variants).
+against the goldens and the per-gate reference for all 16 LSTM variants and
+both GRU variants).  The cell's arrays dict is flattened with
+``jax.tree_util`` (deterministic key order) into one ref per leaf and
+rebuilt inside the kernel, so a new cell needs NO kernel changes: whatever
+``quantize_<cell>_layer`` packs simply rides along into VMEM.
 
-The masked variant takes a per-row ``valid_len`` and freezes ``(h, c)`` for
-rows past their valid prefix -- the chunked-prefill contract of
-``ops.quant_lstm_seq_masked``.
+The masked variant takes a per-row ``valid_len`` and freezes every state
+leaf for rows past their valid prefix -- the chunked-prefill contract of
+``ops.quant_recurrent_seq_masked``.
 
 Sizing note: blocks span the full ``(B, ...)`` extents (integer LayerNorm
 reduces over the whole hidden axis, and the carry must stay resident), so
@@ -42,128 +48,132 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import cell as C
+
 from . import ref
 
-
-def _peephole_gates(spec) -> Tuple[str, ...]:
-    # recipe.py quantizes P only for non-z gates (CIFG already dropped "i")
-    return tuple(g for g in spec.variant.gates if g != "z")
+# Consumed by the hoisted input GEMM, never by the recurrent stage.
+_INPUT_GEMM_KEYS = ("W_cat", "fold_x_cat")
 
 
-def _scan_kernel(*refs, spec, masked: bool):
+def _recurrent_vals(arrays: Dict[str, Any]):
+    """Deterministic flat view of the recurrent-stage arrays.
+
+    ``jax.tree_util`` flattens dicts in sorted-key order, so the leaf list
+    and its treedef are a stable function of the arrays' key structure --
+    the kernel rebuilds the dict from one ref per leaf.
+    """
+    rec = {k: v for k, v in arrays.items() if k not in _INPUT_GEMM_KEYS}
+    return jax.tree_util.tree_flatten(rec)
+
+
+def _scan_kernel(*refs, spec, treedef, n_vals: int, n_state: int,
+                 masked: bool):
     it = iter(refs)
     acc_ref = next(it)  # (B, 1, G*H) int32: step slice of the hoisted GEMM
-    r_ref = next(it)  # (d_out, G*H) int8, VMEM-resident all sweep
-    fhb_ref = next(it)  # (G*H,) int32
-    h0_ref = next(it)  # (B, d_out) int8
-    c0_ref = next(it)  # (B, H) int16
-    vals: Dict[str, Any] = {}
-    if spec.use_peephole:
-        vals["P"] = {g: next(it)[...] for g in _peephole_gates(spec)}
-    if spec.use_layernorm:
-        vals["L"] = {g: next(it)[...] for g in spec.variant.gates}
-        vals["Lb"] = {g: next(it)[...] for g in spec.variant.gates}
-    if spec.use_projection:
-        vals["W_proj"] = next(it)[...]
-        vals["fold_proj"] = next(it)[...]
+    val_refs = [next(it) for _ in range(n_vals)]  # VMEM-resident all sweep
+    s0_refs = [next(it) for _ in range(n_state)]  # t=0 carry seeds
     vl_ref = next(it) if masked else None
-    ys_ref, h_out_ref, c_out_ref = next(it), next(it), next(it)
-    h_scr, c_scr = next(it), next(it)  # VMEM carry, persistent across steps
+    ys_ref = next(it)
+    out_refs = [next(it) for _ in range(n_state)]  # final carry outputs
+    scrs = [next(it) for _ in range(n_state)]  # VMEM carry, one per leaf
 
     t = pl.program_id(0)
 
     @pl.when(t == 0)
     def _seed_carry():
-        h_scr[...] = h0_ref[...]
-        c_scr[...] = c0_ref[...]
+        for scr, s0 in zip(scrs, s0_refs):
+            scr[...] = s0[...]
 
-    h = h_scr[...]
-    c = c_scr[...]
-    vals["R_cat"] = r_ref[...]
-    vals["fold_hb_cat"] = fhb_ref[...]
-    h_new, c_new = ref.quant_lstm_recurrent_jnp(
-        vals, spec, acc_ref[...][:, 0, :], h, c)
+    state = tuple(scr[...] for scr in scrs)
+    vals = jax.tree_util.tree_unflatten(treedef, [r[...] for r in val_refs])
+    new_state = ref.recurrent_step_jnp(
+        vals, spec, acc_ref[...][:, 0, :], state)
     if masked:
         live = (vl_ref[...] > t)[:, None]
-        h_new = jnp.where(live, h_new, h)
-        c_new = jnp.where(live, c_new, c)
-    ys_ref[...] = h_new[:, None, :]
-    h_scr[...] = h_new
-    c_scr[...] = c_new
+        new_state = tuple(
+            jnp.where(live, new, old)
+            for new, old in zip(new_state, state))
+    ys_ref[...] = new_state[0][:, None, :]  # leaf 0 is the emitted output
+    for scr, new in zip(scrs, new_state):
+        scr[...] = new
 
     @pl.when(t == pl.num_programs(0) - 1)
     def _emit_final_state():
-        h_out_ref[...] = h_new
-        c_out_ref[...] = c_new
+        for out, new in zip(out_refs, new_state):
+            out[...] = new
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "interpret"))
-def quant_lstm_seq_scan_pallas(
+def quant_recurrent_seq_scan_pallas(
     arrays: Dict[str, Any],
-    spec,  # core.recipe.QLSTMSpec (static)
+    spec,  # core.recipe.Q*Spec (static, names the cell)
     acc_x_all: jax.Array,  # int32 (B, T, G*H): hoisted input accumulator
-    h0_q: jax.Array,  # int8 (B, d_out)
-    c0_q: jax.Array,  # int16 (B, H)
+    state0: Tuple[jax.Array, ...],  # per cell.state_leaves(spec)
     valid_len: Optional[jax.Array] = None,  # int32 (B,): masked variant
     *,
     interpret: bool = False,
-) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
     """Run the recurrent stage for a whole sequence in ONE kernel launch.
 
-    Returns ``(ys int8 (B, T, d_out), (h_final, c_final))`` -- bit-identical
-    to scanning ``ops.quant_lstm_recurrent_step`` over the same slices.
+    Returns ``(ys int8 (B, T, d_out), state_final)`` -- bit-identical to
+    scanning ``ops.quant_recurrent_step`` over the same slices.
     """
     B, T, GH = acc_x_all.shape
-    H = spec.cfg_d_hidden
-    d_out = spec.cfg_d_proj if spec.use_projection else H
+    cell = C.get_cell(spec)
+    leaves = cell.state_leaves(spec)
+    d_out = cell.d_out(spec)
     masked = valid_len is not None
+    state0 = tuple(state0)
+    vals_flat, treedef = _recurrent_vals(arrays)
 
     def const(shape):
         """Whole-array block revisited every grid step (stays in VMEM)."""
         return pl.BlockSpec(shape, lambda t, _n=len(shape): (0,) * _n)
 
-    inputs = [acc_x_all, arrays["R_cat"], arrays["fold_hb_cat"], h0_q, c0_q]
-    in_specs = [
-        pl.BlockSpec((B, 1, GH), lambda t: (0, t, 0)),
-        const(arrays["R_cat"].shape),
-        const((GH,)),
-        const((B, d_out)),
-        const((B, H)),
-    ]
-    if spec.use_peephole:
-        for g in _peephole_gates(spec):
-            inputs.append(arrays["P"][g])
-            in_specs.append(const((H,)))
-    if spec.use_layernorm:
-        for key in ("L", "Lb"):
-            for g in spec.variant.gates:
-                inputs.append(arrays[key][g])
-                in_specs.append(const((H,)))
-    if spec.use_projection:
-        inputs += [arrays["W_proj"], arrays["fold_proj"]]
-        in_specs += [const(arrays["W_proj"].shape), const((d_out,))]
+    inputs = [acc_x_all, *vals_flat, *state0]
+    in_specs = [pl.BlockSpec((B, 1, GH), lambda t: (0, t, 0))]
+    in_specs += [const(v.shape) for v in vals_flat]
+    in_specs += [const((B, leaf.width)) for leaf in leaves]
     if masked:
         inputs.append(valid_len)
         in_specs.append(const((B,)))
 
-    ys, h, c = pl.pallas_call(
-        functools.partial(_scan_kernel, spec=spec, masked=masked),
+    outs = pl.pallas_call(
+        functools.partial(
+            _scan_kernel, spec=spec, treedef=treedef,
+            n_vals=len(vals_flat), n_state=len(leaves), masked=masked),
         grid=(T,),
         in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((B, 1, d_out), lambda t: (0, t, 0)),
-            const((B, d_out)),
-            const((B, H)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, T, d_out), jnp.int8),
-            jax.ShapeDtypeStruct((B, d_out), jnp.int8),
-            jax.ShapeDtypeStruct((B, H), jnp.int16),
-        ],
+        out_specs=(
+            [pl.BlockSpec((B, 1, d_out), lambda t: (0, t, 0))]
+            + [const((B, leaf.width)) for leaf in leaves]
+        ),
+        out_shape=(
+            [jax.ShapeDtypeStruct((B, T, d_out), jnp.int8)]
+            + [jax.ShapeDtypeStruct((B, leaf.width), leaf.dtype)
+               for leaf in leaves]
+        ),
         scratch_shapes=[
-            pltpu.VMEM((B, d_out), jnp.int8),
-            pltpu.VMEM((B, H), jnp.int16),
+            pltpu.VMEM((B, leaf.width), leaf.dtype) for leaf in leaves
         ],
         interpret=interpret,
     )(*inputs)
-    return ys, (h, c)
+    return outs[0], tuple(outs[1:])
+
+
+def quant_lstm_seq_scan_pallas(
+    arrays: Dict[str, Any],
+    spec,  # core.recipe.QLSTMSpec (static)
+    acc_x_all: jax.Array,
+    h0_q: jax.Array,
+    c0_q: jax.Array,
+    valid_len: Optional[jax.Array] = None,
+    *,
+    interpret: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """LSTM-shaped wrapper kept for callers that thread ``(h0, c0)``."""
+    ys, state = quant_recurrent_seq_scan_pallas(
+        arrays, spec, acc_x_all, (h0_q, c0_q), valid_len,
+        interpret=interpret)
+    return ys, state

@@ -168,6 +168,106 @@ def quant_lstm_recurrent_jnp(vals, spec, acc_x_t, h_q, c_q):
     return lstm_project_jnp(vals, spec, m_q), c_new
 
 
+# --- recurrent stage of the hoisted-GEMM GRU executor ----------------------
+
+
+def gru_gate_preacts(vals, spec, acc_x, acc_h):
+    """Per-step GRU gate pre-activations from the packed [r|u|n] int32
+    accumulators (reset-after form, ``core/recipe.quantize_gru_layer``).
+
+    ``r``/``u`` follow the LSTM gate path exactly: rescale both
+    accumulators to the gate scale, saturating-add, sat16, optional LN.
+    The candidate ``n`` applies the reset gate to the *rescaled* recurrent
+    term before adding the input term -- ``r`` is Q0.15, so
+    ``rdp(r * gh16, 15)`` stays at the gate scale -- matching the float
+    ``n = tanh(xW + r (.) (hR + b))``.
+
+    Returns ``(r15, u15, n16)``: r/u as Q0.15 sigmoid activations (int32),
+    n as the int16 pre-tanh value.
+    """
+
+    def block(g):
+        k = spec.gate_names.index(g)
+        H = spec.cfg_d_hidden
+        return acc_x[..., k * H:(k + 1) * H], acc_h[..., k * H:(k + 1) * H]
+
+    def maybe_ln(g, gate16):
+        if spec.use_layernorm:
+            gs = spec.gate_spec(g)
+            return iops.integer_layernorm(
+                gate16, vals["L"][g], vals["Lb"][g],
+                gs.ln_out[0], gs.ln_out[1],
+            )
+        return gate16
+
+    acts = {}
+    for g in ("r", "u"):
+        gs = spec.gate_spec(g)
+        ax, ah = block(g)
+        gate16 = fp.saturate_i16(
+            fp.saturating_add_i32(
+                fp.multiply_by_quantized_multiplier(ax, *gs.eff_x),
+                fp.multiply_by_quantized_multiplier(ah, *gs.eff_h),
+            )
+        )
+        acts[g] = fp.sigmoid_q15(maybe_ln(g, gate16), 3).astype(jnp.int32)
+
+    gs = spec.gate_spec("n")
+    ax, ah = block("n")
+    gh16 = fp.saturate_i16(
+        fp.multiply_by_quantized_multiplier(ah, *gs.eff_h)
+    ).astype(jnp.int32)
+    rg = fp.rounding_divide_by_pot(acts["r"] * gh16, 15)
+    n16 = fp.saturate_i16(
+        fp.saturating_add_i32(
+            fp.multiply_by_quantized_multiplier(ax, *gs.eff_x), rg
+        )
+    )
+    return acts["r"], acts["u"], maybe_ln("n", n16)
+
+
+def quant_gru_recurrent_jnp(vals, spec, acc_x_t, h_q):
+    """Pure-jnp GRU recurrent stage: one timestep given the precomputed
+    input accumulator slice.  ``h' = u (.) h + (1 - u) (.) n`` runs exactly
+    in integers: the carry term needs only a 2**-15 shift (input and output
+    hidden share ONE (s, zp) format by construction -- see QGRUSpec), the
+    candidate term rescales Q0.30 -> h units.  Both products fit int32
+    (|u| <= 2**15, |h - zp| <= 255 -> < 2**23; |(2**15-u)*n| < 2**30).
+    """
+    acc_h = iops.matmul_i8_i32(h_q, vals["R_cat"]) + vals["fold_hb_cat"]
+    _, u15, n16 = gru_gate_preacts(vals, spec, acc_x_t, acc_h)
+    n_act = fp.tanh_q15(n16, 3).astype(jnp.int32)
+    carry = u15 * (h_q.astype(jnp.int32) - jnp.int32(spec.zp_h))
+    blend = (jnp.int32(32768) - u15) * n_act
+    h_new = fp.saturating_add_i32(
+        fp.multiply_by_quantized_multiplier(carry, *spec.eff_carry),
+        fp.multiply_by_quantized_multiplier(blend, *spec.eff_n),
+    )
+    return fp.saturate_i8(h_new + jnp.int32(spec.zp_h_out))
+
+
+# --- cell-generic recurrent step (``core/cell.py`` contract) ---------------
+
+
+def recurrent_step_jnp(vals, spec, acc_x_t, state):
+    """One timestep of any registered cell over its flat state tuple.
+
+    ``state`` is ordered per ``cell.state_leaves(spec)``; the returned tuple
+    has the same structure and its leaf 0 is the emitted output ``ys[t]``.
+    Both sequence executors (the ``xla`` scan and the persistent Pallas
+    kernel) trace exactly this function, so adding a cell here ships it on
+    every backend at once.
+    """
+    cell = getattr(spec, "cell", "lstm")
+    if cell == "lstm":
+        h_new, c_new = quant_lstm_recurrent_jnp(
+            vals, spec, acc_x_t, state[0], state[1])
+        return (h_new, c_new)
+    if cell == "gru":
+        return (quant_gru_recurrent_jnp(vals, spec, acc_x_t, state[0]),)
+    raise NotImplementedError(f"no recurrent_step_jnp for cell {cell!r}")
+
+
 def _mbqm_np(x: np.ndarray, m0: int, shift: int) -> np.ndarray:
     """numpy int64 MultiplyByQuantizedMultiplier (gemmlowp semantics)."""
     x = x.astype(np.int64)

@@ -13,7 +13,7 @@ stream is nearly free and bit-exact:
     admission-control benchmarks.  Policies may **oversubscribe**: admit
     more live streams than slots and multiplex them by preemption.
   * **state pool** (``launch/state_pool.py``) -- preempted streams park
-    their quantized ``(h, c, len)`` state in host-side pages and resume
+    their quantized per-cell state (plus ``len``) in host-side pages and resume
     later bit-exactly (integer state: the swap round trip re-rounds
     nothing).  The stream's drafter travels with its host bookkeeping, so
     speculation state survives preemption too.
@@ -276,8 +276,10 @@ def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
         if constrain is None:
             return out
         out = dict(out)
-        out["h"] = [constrain(h, ("batch", "mlp")) for h in out["h"]]
-        out["c"] = [constrain(c, ("batch", "mlp")) for c in out["c"]]
+        for k in out:
+            if k != "len":
+                out[k] = [constrain(leaf, ("batch", "mlp"))
+                          for leaf in out[k]]
         return out
 
     def step(params, tokens, state, active):
@@ -293,12 +295,11 @@ def _engine_step_fns(qlayers, cfg, backend: str, constrain=None):
         greedy = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         mask = active[:, None]
         out = {
-            "h": [jnp.where(mask, n, o) for n, o in zip(new_state["h"],
-                                                        state["h"])],
-            "c": [jnp.where(mask, n, o) for n, o in zip(new_state["c"],
-                                                        state["c"])],
-            "len": state["len"] + active.astype(jnp.int32),
+            k: [jnp.where(mask, n, o)
+                for n, o in zip(new_state[k], state[k])]
+            for k in state if k != "len"
         }
+        out["len"] = state["len"] + active.astype(jnp.int32)
         return greedy, constrain_state(out)
 
     def chunk_step(params, tokens, state, valid):

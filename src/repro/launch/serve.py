@@ -7,7 +7,12 @@
     PYTHONPATH=src python -m repro.launch.serve --arch lstm-rnnt --smoke \
         --quant int8-lstm --backend interpret
 
-Continuous-batching engine mode (``--engine``, int8-lstm only): instead of
+    # same engine, integer GRU cell (packed [r|u|n], single h carry):
+    PYTHONPATH=src python -m repro.launch.serve --arch gru-rnnt --smoke \
+        --quant int8-gru --backend interpret
+
+Continuous-batching engine mode (``--engine``, int8-lstm / int8-gru):
+instead of
 one fixed static batch, a queue of requests with mixed prompt lengths and
 generation budgets is served through ``launch/engine.py`` -- admitted into
 ``--slots`` decode-batch rows, prefilled by teacher-forcing through the same
@@ -76,15 +81,21 @@ def _greedy_loop(decode, params, logits, state, n_gen):
     return jnp.concatenate(out_tokens, axis=1)
 
 
-def _quantized_lstm_lm(args, cfg):
-    """Init + calibrate + quantize the stacked LSTM LM once (shared by the
-    static path and the engine path)."""
+def _quantized_recurrent_lm(args, cfg):
+    """Init + calibrate + quantize the stacked recurrent LM once (shared by
+    the static path and the engine path)."""
     from repro.models import lstm_lm, model_zoo
 
+    want_cell = args.quant.split("-", 1)[1]  # int8-lstm -> lstm
     if cfg.family != "lstm":
         raise SystemExit(
-            f"--quant int8-lstm requires an lstm arch (e.g. lstm-rnnt), "
-            f"got {cfg.name} ({cfg.family})")
+            f"--quant {args.quant} requires an lstm-family arch (e.g. "
+            f"lstm-rnnt, gru-rnnt), got {cfg.name} ({cfg.family})")
+    have_cell = lstm_lm.rnn_cell(cfg)
+    if have_cell != want_cell:
+        raise SystemExit(
+            f"--quant {args.quant} expects rnn_cell={want_cell!r} but "
+            f"{cfg.name} uses {have_cell!r} (try --quant int8-{have_cell})")
     bundle = model_zoo.build(cfg)
     params, _ = bundle.init(jax.random.PRNGKey(0))
     calib = jax.random.randint(
@@ -92,16 +103,16 @@ def _quantized_lstm_lm(args, cfg):
         cfg.vocab_size)
     t0 = time.time()
     qlayers = lstm_lm.quantize_stack(params, cfg, calib)
-    print(f"calibrated+quantized {len(qlayers)} LSTM layers "
+    print(f"calibrated+quantized {len(qlayers)} {have_cell.upper()} layers "
           f"in {time.time() - t0:.1f}s (backend={args.backend})")
     return params, qlayers
 
 
 def _serve_engine(args, cfg) -> None:
-    """Continuous-batching serving of the integer LSTM LM."""
+    """Continuous-batching serving of the integer recurrent LM."""
     from repro.launch import engine as E
 
-    params, qlayers = _quantized_lstm_lm(args, cfg)
+    params, qlayers = _quantized_recurrent_lm(args, cfg)
     if args.trace:
         requests = E.load_trace(args.trace, cfg.vocab_size, seed=1)
     else:
@@ -118,7 +129,7 @@ def _serve_engine(args, cfg) -> None:
         oversubscribe=args.oversubscribe)
     eng.submit_all(requests)
     results, stats = eng.run()
-    print(f"arch={cfg.name} quant=int8-lstm engine slots={args.slots} "
+    print(f"arch={cfg.name} quant={args.quant} engine slots={args.slots} "
           f"chunk={args.chunk} speculate={args.speculate} "
           f"policy={stats.policy} oversubscribe={stats.oversubscribe} "
           f"backend={args.backend}")
@@ -146,8 +157,8 @@ def _serve_engine(args, cfg) -> None:
     print("sample:", first.tokens)
 
 
-def _serve_int8_lstm(args, cfg) -> None:
-    """Integer-only serving of the stacked LSTM LM (paper sec 3.2 path).
+def _serve_int8_recurrent(args, cfg) -> None:
+    """Integer-only serving of the stacked recurrent LM (paper sec 3.2).
 
     The scanned prefill runs the hoisted two-stage executor: per layer, the
     whole prompt's packed input GEMM is one time-batched int8 matmul and
@@ -157,7 +168,7 @@ def _serve_int8_lstm(args, cfg) -> None:
     """
     from repro.models import lstm_lm
 
-    params, qlayers = _quantized_lstm_lm(args, cfg)
+    params, qlayers = _quantized_recurrent_lm(args, cfg)
     prompt = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
         cfg.vocab_size)
@@ -174,7 +185,7 @@ def _serve_int8_lstm(args, cfg) -> None:
     t0 = time.time()
     gen = _greedy_loop(decode, params, logits, state, args.gen)
     gen_s = time.time() - t0
-    print(f"arch={cfg.name} quant=int8-lstm backend={args.backend}")
+    print(f"arch={cfg.name} quant={args.quant} backend={args.backend}")
     print(f"prompt tokens/s: {args.batch * args.prompt_len / prefill_s:.1f}")
     print(f"decode tokens/s: {args.batch * args.gen / gen_s:.1f}")
     print("sample:", gen[0].tolist())
@@ -189,12 +200,14 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--quant", default="none",
-                    choices=["none", "int8", "int8-lstm"])
+                    choices=["none", "int8", "int8-lstm", "int8-gru"])
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "pallas", "interpret"],
-                    help="integer LSTM kernel backend (int8-lstm only)")
+                    help="integer recurrent kernel backend "
+                         "(int8-lstm / int8-gru only)")
     ap.add_argument("--engine", action="store_true",
-                    help="continuous-batching engine (int8-lstm only)")
+                    help="continuous-batching engine (int8-lstm / "
+                         "int8-gru only)")
     ap.add_argument("--slots", type=int, default=8,
                     help="decode-batch rows of the engine")
     ap.add_argument("--chunk", type=int, default=1,
@@ -249,9 +262,10 @@ def main() -> None:
     if args.speculate and not args.engine:
         ap.error("--speculate requires --engine (speculative decoding is a "
                  "continuous-batching program)")
-    if args.engine and args.quant != "int8-lstm":
-        ap.error("--engine requires --quant int8-lstm (the integer LSTM LM "
-                 "is the only model with per-slot (h, c) decode state)")
+    if args.engine and args.quant not in ("int8-lstm", "int8-gru"):
+        ap.error("--engine requires --quant int8-lstm or int8-gru (the "
+                 "integer recurrent LMs are the only models with per-slot "
+                 "integer decode state)")
 
     from repro.configs.registry import get_config
     from repro.models import model_zoo, quant_transformer
@@ -260,8 +274,8 @@ def main() -> None:
     if args.engine:
         _serve_engine(args, cfg)
         return
-    if args.quant == "int8-lstm":
-        _serve_int8_lstm(args, cfg)
+    if args.quant in ("int8-lstm", "int8-gru"):
+        _serve_int8_recurrent(args, cfg)
         return
 
     bundle = model_zoo.build(cfg)

@@ -1,9 +1,10 @@
-"""Paged host-side pool of quantized per-stream LSTM decode states.
+"""Paged host-side pool of quantized per-stream recurrent decode states.
 
 The paper's deployment pitch makes preemption nearly free: an integer
-LSTM's whole recurrent state is two small integer vectors per layer per
-stream (int8 hidden at its zero point, int16 cell) plus one int32 token
-counter -- a few KB, not a transformer KV cache that grows with context.
+recurrent layer's whole state is a handful of small integer vectors per
+layer per stream (e.g. an LSTM's int8 hidden at its zero point + int16
+cell, or a GRU's single int8 hidden) plus one int32 token counter -- a few
+KB, not a transformer KV cache that grows with context.
 Swapping a live stream out of its decode-batch slot is therefore one
 row-slice + host copy, and swapping it back in is one row write; both are
 **bit-exact** because the state is integer (no float re-rounding on the
@@ -11,8 +12,8 @@ round trip) and every decode-batch row is computed independently of its
 neighbours.
 
 :class:`StatePool` stores those per-stream states in fixed-size **pages**
-(one page = ``page_size`` rows of every per-layer ``h``/``c`` array plus the
-``len`` counters), allocated lazily and recycled through a free list, so a
+(one page = ``page_size`` rows of every state leaf plus the ``len``
+counters), allocated lazily and recycled through a free list, so a
 long-lived serving process that oversubscribes its slots (more live streams
 than decode-batch rows) neither fragments host memory nor grows it per
 admission.  The pool is the mechanism behind the engine's scheduling
@@ -21,11 +22,12 @@ parking its state here and *resumes* it later into whatever slot is free,
 and the stream's tokens stay bit-identical to decoding it alone no matter
 how often it bounces.
 
-The pool is deliberately model-agnostic at the dtype level: it pages any
-``{"h": [rows...], "c": [rows...], "len": counter}`` state whose arrays
-have a leading batch axis of 1 (the shape ``models.lstm_lm.slice_state``
-produces), so a second recurrent family served through the engine reuses it
-unchanged.
+The pool is cell-agnostic: it pages any ``{<leaf>: [rows...] | row, ...,
+"len": counter}`` state dict whose arrays have a leading batch axis of 1
+(the shape ``models.lstm_lm.slice_state`` produces) -- leaf names, leaf
+count, dtypes, and whether a leaf is a per-layer list or a single array are
+all taken from the first state parked.  LSTM (``h``/``c``), GRU (``h``
+only), and any future ``QuantRecurrentCell`` page through it unchanged.
 """
 from __future__ import annotations
 
@@ -49,27 +51,34 @@ def _as_row(x) -> np.ndarray:
 
 
 class _Page:
-    """One page: ``page_size`` rows of every state leaf, preallocated."""
+    """One page: ``page_size`` rows of every state leaf, preallocated.
+
+    ``data[key]`` mirrors the state dict's shape: a list of per-layer
+    arrays when the state holds a list, else a single array.
+    """
 
     def __init__(self, template: Dict[str, Any], page_size: int):
-        self.h = [np.zeros((page_size,) + r.shape[1:], r.dtype)
-                  for r in template["h"]]
-        self.c = [np.zeros((page_size,) + r.shape[1:], r.dtype)
-                  for r in template["c"]]
-        self.len = np.zeros((page_size,), template["len"].dtype)
+        def alloc(r: np.ndarray) -> np.ndarray:
+            return np.zeros((page_size,) + r.shape[1:], r.dtype)
+
+        self.data: Dict[str, Any] = {
+            k: [alloc(r) for r in v] if isinstance(v, list) else alloc(v)
+            for k, v in template.items()
+        }
 
     def write(self, row: int, state: Dict[str, Any]) -> None:
-        for dst, src in zip(self.h, state["h"]):
-            dst[row] = src[0]
-        for dst, src in zip(self.c, state["c"]):
-            dst[row] = src[0]
-        self.len[row] = state["len"][0]
+        for k, dst in self.data.items():
+            if isinstance(dst, list):
+                for d, src in zip(dst, state[k]):
+                    d[row] = src[0]
+            else:
+                dst[row] = state[k][0]
 
     def read(self, row: int) -> Dict[str, Any]:
         return {
-            "h": [a[row:row + 1].copy() for a in self.h],
-            "c": [a[row:row + 1].copy() for a in self.c],
-            "len": self.len[row:row + 1].copy(),
+            k: ([a[row:row + 1].copy() for a in v] if isinstance(v, list)
+                else v[row:row + 1].copy())
+            for k, v in self.data.items()
         }
 
 
@@ -115,12 +124,14 @@ class StatePool:
     @property
     def state_bytes_per_stream(self) -> int:
         """Host bytes one parked stream occupies (the paper's 'tiny state'
-        claim, measurable: a few KB/stream vs a KV cache's MBs)."""
+        claim, measurable: a few KB/stream vs a KV cache's MBs).  Summed
+        generically over the state pytree, so it is correct for any cell
+        (LSTM h+c, GRU h, ...)."""
         if self._template is None:
             return 0
-        t = self._template
-        return int(sum(a.nbytes for a in t["h"]) +
-                   sum(a.nbytes for a in t["c"]) + t["len"].nbytes)
+        return int(sum(
+            sum(a.nbytes for a in v) if isinstance(v, list) else v.nbytes
+            for v in self._template.values()))
 
     def location(self, key) -> Tuple[int, int]:
         """(page, row) a key is parked at -- for tests pinning page reuse."""
@@ -136,10 +147,15 @@ class StatePool:
             raise ValueError(
                 f"stream {key!r} is already in the pool (double swap-out)")
         row_state = {
-            "h": [_as_row(x) for x in state["h"]],
-            "c": [_as_row(x) for x in state["c"]],
-            "len": _as_row(state["len"]),
+            k: ([_as_row(x) for x in v] if isinstance(v, list)
+                else _as_row(v))
+            for k, v in state.items()
         }
+        if self._template is not None:
+            if set(row_state) != set(self._template):
+                raise ValueError(
+                    f"state leaves {sorted(row_state)} do not match the "
+                    f"pool's template {sorted(self._template)}")
         if self._template is None:
             self._template = row_state
         if not self._free:

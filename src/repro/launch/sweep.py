@@ -22,7 +22,9 @@ def cells():
     from repro.configs.base import applicable_shapes
     from repro.configs.registry import ASSIGNED, CONFIGS
 
-    for arch in list(ASSIGNED) + ["lstm-rnnt"]:
+    # ASSIGNED excludes the recurrent paper-repro LMs; sweep them too
+    recurrent = [k for k, c in CONFIGS.items() if c.family == "lstm"]
+    for arch in list(ASSIGNED) + recurrent:
         for cell in applicable_shapes(CONFIGS[arch]):
             yield arch, cell.name
 

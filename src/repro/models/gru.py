@@ -1,0 +1,160 @@
+"""Float GRU reference: the second cell served through the integer stack.
+
+The paper's recipe (Table 2) is topology-agnostic -- integer-only recurrence
+with 8-bit weights and mostly 8-bit activations -- and related work (iRNN)
+applies it to GRUs directly.  This module is the GRU analogue of
+``models/lstm.py``: the accuracy baseline and the calibration vehicle (taps
+at every Table-2 tensor) for ``core/recipe.quantize_gru_layer``.
+
+We use the cuDNN/v3 "reset-after" form so the recurrent matmul stays one
+packed ``(B, H) x (H, 3H)`` GEMM (the reset gate multiplies the *output* of
+``h @ R_n``, not its input):
+
+  r = sigmoid(x W_r + h R_r + b_r)
+  u = sigmoid(x W_u + h R_u + b_u)
+  n = tanh(x W_n + r (.) (h R_n + b_n))
+  h' = u (.) h + (1 - u) (.) n
+
+Variants: plain and layer-normalized (LN replaces the per-gate bias add with
+``norm(.) (.) L + b`` exactly as in the LSTM).  No projection/peephole/CIFG
+analogues exist for GRU, so the zoo has 2 GRU variants vs the LSTM's 16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lstm import _layernorm_stats
+
+GATES = ("r", "u", "n")  # reset, update, new/candidate
+
+
+@dataclasses.dataclass(frozen=True)
+class GRUVariant:
+    use_layernorm: bool = False
+
+    @property
+    def gates(self) -> Tuple[str, ...]:
+        return GATES
+
+    @property
+    def name(self) -> str:
+        return "LN" if self.use_layernorm else "noLN"
+
+
+ALL_VARIANTS = tuple(GRUVariant(ln) for ln in (False, True))
+
+
+@dataclasses.dataclass(frozen=True)
+class GRUConfig:
+    d_input: int
+    d_hidden: int
+    variant: GRUVariant = GRUVariant()
+
+    @property
+    def d_output(self) -> int:
+        return self.d_hidden
+
+
+def init_gru_params(key, cfg: GRUConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    """One GRU layer's parameters; per-gate W/R kept separate (fig 16)."""
+    v = cfg.variant
+    keys = jax.random.split(key, 8)
+    k = iter(keys)
+
+    def dense(key, shape, fan_in):
+        return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+    params: Dict[str, Any] = {"W": {}, "R": {}, "b": {}}
+    for g in v.gates:
+        params["W"][g] = dense(next(k), (cfg.d_input, cfg.d_hidden), cfg.d_input)
+        params["R"][g] = dense(next(k), (cfg.d_hidden, cfg.d_hidden), cfg.d_hidden)
+        params["b"][g] = jnp.zeros((cfg.d_hidden,), dtype)
+    if v.use_layernorm:
+        params["L"] = {g: jnp.ones((cfg.d_hidden,), dtype) for g in v.gates}
+    return params
+
+
+def gru_cell(
+    params: Dict[str, Any],
+    cfg: GRUConfig,
+    x: jax.Array,
+    h: jax.Array,
+    collector=None,
+) -> jax.Array:
+    """One float GRU step (reset-after form).  x: (B, d_in); h: (B, d_h).
+
+    ``collector``: optional TapCollector registering every Table-2 range.
+    Tap convention matches the LSTM: ``g_<gate>`` is the pre-activation
+    BEFORE layer norm and before the bias (the bias is integer-folded), and
+    for ``n`` it is taken after the reset product so calibration sees the
+    value the integer kernel saturates.
+    """
+    v = cfg.variant
+
+    def tap(name, t):
+        return collector.tap(name, t) if collector is not None else t
+
+    x = tap("x", x)
+    h = tap("h", h)
+
+    def sigmoid_gate(g: str):
+        acc = x @ params["W"][g] + h @ params["R"][g]
+        acc = tap(f"g_{g}", acc)
+        if v.use_layernorm:
+            acc = _layernorm_stats(acc) * params["L"][g] + params["b"][g]
+        else:
+            acc = acc + params["b"][g]
+        return jax.nn.sigmoid(acc)
+
+    r_t = sigmoid_gate("r")
+    u_t = sigmoid_gate("u")
+
+    # candidate: reset gate scales the recurrent contribution only
+    gh = h @ params["R"]["n"]
+    if v.use_layernorm:
+        acc = x @ params["W"]["n"] + r_t * gh
+        acc = tap("g_n", acc)
+        acc = _layernorm_stats(acc) * params["L"]["n"] + params["b"]["n"]
+    else:
+        acc = x @ params["W"]["n"] + r_t * (gh + params["b"]["n"])
+        acc = tap("g_n", acc)
+    n_t = jnp.tanh(acc)
+
+    h_new = u_t * h + (1.0 - u_t) * n_t
+    h_new = tap("h_out", h_new)
+    return h_new
+
+
+def gru_layer(
+    params: Dict[str, Any],
+    cfg: GRUConfig,
+    xs: jax.Array,
+    h0: Optional[jax.Array] = None,
+    collector=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Run a layer over time.  xs: (B, T, d_in) -> (B, T, d_h)."""
+    B = xs.shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((B, cfg.d_hidden), xs.dtype)
+
+    if collector is not None:
+        # Calibration path: unrolled python loop so taps aggregate across
+        # steps without threading carry types through lax.scan.
+        h = h0
+        outs = []
+        for t in range(xs.shape[1]):
+            h = gru_cell(params, cfg, xs[:, t], h, collector)
+            outs.append(h)
+        return jnp.stack(outs, axis=1), h
+
+    def step(h, x_t):
+        h = gru_cell(params, cfg, x_t, h, None)
+        return h, h
+
+    h, ys = jax.lax.scan(step, h0, jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), h

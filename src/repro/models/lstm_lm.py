@@ -1,9 +1,18 @@
-"""Stacked-LSTM language model: the paper's own architecture as a config.
+"""Stacked recurrent language model: the paper's architecture as a config.
 
-10 layers x 2048 hidden with a 640-wide projection (the RNN-T encoder stack
-of [Sak et al.] / the paper's Table 1 models), embedding + softmax head.
-Supports float training/serving and -- via the repro.core recipe -- fully
-integer-only serving (see examples/serve_quantized.py).
+10 layers x 2048 hidden (the RNN-T encoder stack of [Sak et al.] / the
+paper's Table 1 models), embedding + softmax head.  Supports float
+training/serving and -- via the repro.core recipe -- fully integer-only
+serving (see examples/serve_quantized.py).
+
+Cell-agnostic since PR 8: ``cfg.rnn_cell`` selects the recurrent cell
+(``"lstm"`` -- the paper's LN+projection topology with a 640-wide
+projection; or ``"gru"`` -- the LN reset-after GRU, no projection stage).
+The stacked decode state is ``{<cell state keys...>: [per-layer arrays],
+"len": counter}`` (LSTM ``{"h", "c", "len"}``, GRU ``{"h", "len"}``); every
+state helper below (init/reset/slice/stack/write) iterates the cell's
+declared leaves, so the serving engine, state pool, and speculation paths
+never name a leaf.
 """
 from __future__ import annotations
 
@@ -14,19 +23,41 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.layers import embedding as emb
+from repro.models import gru as G
 from repro.models import lstm as L
+
+def rnn_cell(cfg: ArchConfig) -> str:
+    """The stack's recurrent cell name (pre-PR-8 configs mean LSTM)."""
+    return getattr(cfg, "rnn_cell", "lstm")
+
+
+def state_keys(cfg: ArchConfig) -> Tuple[str, ...]:
+    """Ordered state pytree keys of the stack's cell (leaf 0 = output)."""
+    from repro.core import cell as rc
+
+    return rc.CELLS[rnn_cell(cfg)].state_key_names
+
 
 def d_proj(cfg):
     """Projection width: 2048 -> 640 (Sak et al. ratio 5/16)."""
     return max(cfg.d_rnn * 5 // 16, 8)
 
 
+def stack_d_out(cfg: ArchConfig) -> int:
+    """Per-layer output width (what the LM head consumes)."""
+    return d_proj(cfg) if rnn_cell(cfg) == "lstm" else cfg.d_rnn
+
+
 def layer_cfgs(cfg: ArchConfig):
-    variant = L.LSTMVariant(use_layernorm=True, use_projection=True)
     out = []
     for i in range(cfg.n_layers):
-        d_in = cfg.d_model if i == 0 else d_proj(cfg)
-        out.append(L.LSTMConfig(d_in, cfg.d_rnn, d_proj(cfg), variant))
+        d_in = cfg.d_model if i == 0 else stack_d_out(cfg)
+        if rnn_cell(cfg) == "gru":
+            out.append(G.GRUConfig(
+                d_in, cfg.d_rnn, G.GRUVariant(use_layernorm=True)))
+        else:
+            variant = L.LSTMVariant(use_layernorm=True, use_projection=True)
+            out.append(L.LSTMConfig(d_in, cfg.d_rnn, d_proj(cfg), variant))
     return out
 
 
@@ -35,14 +66,18 @@ def init_params(key, cfg: ArchConfig) -> Tuple[Dict, Dict]:
     specs: Dict[str, Any] = {}
     ks = jax.random.split(key, cfg.n_layers + 2)
     emb.embed_init(ks[0], cfg.vocab_size, cfg.d_model, params, specs, tie=True)
-    # head consumes the projection width, not d_model
-    head = (jax.random.normal(ks[-1], (d_proj(cfg), cfg.vocab_size),
+    # head consumes the stack's output width, not d_model
+    head = (jax.random.normal(ks[-1], (stack_d_out(cfg), cfg.vocab_size),
                               jnp.float32) * 0.02).astype(jnp.bfloat16)
     params["lm_head"], specs["lm_head"] = head, ("embed", "vocab")
+    init_layer = (G.init_gru_params if rnn_cell(cfg) == "gru"
+                  else L.init_lstm_params)
+    # params key stays "lstm" for every cell: it names the recurrent stack
+    # slot checkpoints/shardings were built around, not the cell inside it
     params["lstm"] = [
         jax.tree_util.tree_map(
             lambda x: x.astype(jnp.float32),
-            L.init_lstm_params(ks[i + 1], lc))
+            init_layer(ks[i + 1], lc))
         for i, lc in enumerate(layer_cfgs(cfg))
     ]
     # matrices shard ("embed", "mlp"); vectors shard ("mlp",)
@@ -54,28 +89,40 @@ def init_params(key, cfg: ArchConfig) -> Tuple[Dict, Dict]:
     return params, specs
 
 
+def _float_layer(p, lc, x, layer_states, collector, qat):
+    """One float layer step -> (ys, per-layer state tuple, leaf 0 = output).
+
+    ``qat`` reaches only the LSTM (the QAT experiments target the paper's
+    own topology); the GRU float graph is baseline + calibration only.
+    """
+    if isinstance(lc, G.GRUConfig):
+        h0 = None if layer_states is None else layer_states[0]
+        ys, h = G.gru_layer(p, lc, x, h0, collector=collector)
+        return ys, (h,)
+    h0, c0 = (None, None) if layer_states is None else layer_states
+    ys, (h, c) = L.lstm_layer(p, lc, x, h0, c0, collector=collector, qat=qat)
+    return ys, (h, c)
+
+
 def forward(params, cfg: ArchConfig, tokens, constrain, mesh=None,
             train: bool = False, states=None, collector=None, qat=False):
+    keys = state_keys(cfg)
     x = emb.embed_tokens(params, tokens).astype(jnp.float32)
     x = constrain(x, ("batch", "seq", "embed"))
     new_states = []
     for i, (p, lc) in enumerate(zip(params["lstm"], layer_cfgs(cfg))):
         col = _prefixed(collector, f"l{i}/") if collector is not None else None
-        if states is None:
-            x, _ = L.lstm_layer(p, lc, x, collector=col, qat=qat)
-        else:
-            h0, c0 = states["h"][i], states["c"][i]
-            x, (h, c) = L.lstm_layer(p, lc, x, h0, c0, collector=col, qat=qat)
-            new_states.append((h, c))
+        layer_states = (None if states is None else
+                        tuple(states[k][i] for k in keys))
+        x, st = _float_layer(p, lc, x, layer_states, col, qat)
+        new_states.append(st)
     logits = emb.logits_head(params, x.astype(jnp.bfloat16))
     logits = constrain(logits, ("batch", "seq", "vocab"))
     if states is None:
         return logits, None
-    return logits, {
-        "h": [s[0] for s in new_states],
-        "c": [s[1] for s in new_states],
-        "len": states["len"] + tokens.shape[1],
-    }
+    out = {k: [s[j] for s in new_states] for j, k in enumerate(keys)}
+    out["len"] = states["len"] + tokens.shape[1]
+    return logits, out
 
 
 class _prefixed:
@@ -94,13 +141,14 @@ def loss_fn(params, cfg: ArchConfig, batch, constrain, mesh=None, qat=False):
 
 
 def init_decode_state(cfg: ArchConfig, batch: int):
-    return {
-        "h": [jnp.zeros((batch, d_proj(cfg)), jnp.float32)
-              for _ in range(cfg.n_layers)],
-        "c": [jnp.zeros((batch, cfg.d_rnn), jnp.float32)
-              for _ in range(cfg.n_layers)],
-        "len": jnp.zeros((), jnp.int32),
+    widths = {"h": stack_d_out(cfg), "c": cfg.d_rnn}
+    out = {
+        k: [jnp.zeros((batch, widths[k]), jnp.float32)
+            for _ in range(cfg.n_layers)]
+        for k in state_keys(cfg)
     }
+    out["len"] = jnp.zeros((), jnp.int32)
+    return out
 
 
 def prefill(params, cfg, tokens, constrain, mesh=None):
@@ -115,17 +163,17 @@ def decode_step(params, cfg, token, states, constrain, mesh=None):
 
 
 # ---------------------------------------------------------------------------
-# Integer-only serving (paper Table 1 "integer" rows): the LSTM stack runs
-# through core.recipe + the fused executor; embedding and LM head stay float
-# at the quantize/dequantize boundary.
+# Integer-only serving (paper Table 1 "integer" rows): the recurrent stack
+# runs through core.recipe + the fused executor; embedding and LM head stay
+# float at the quantize/dequantize boundary.
 # ---------------------------------------------------------------------------
 
 
 def quantize_stack(params, cfg: ArchConfig, calib_tokens):
     """Calibrate on ``calib_tokens`` and apply the Table-2 recipe per layer.
 
-    Returns a list of ``(arrays, spec)`` pairs (one per LSTM layer) for
-    ``quant_forward``.
+    Returns a list of ``(arrays, spec)`` pairs (one per recurrent layer) for
+    ``quant_forward``; the cell-specific quantizer is picked by the config.
     """
     from repro.core import recipe as R
     from repro.core.calibrate import Stats, TapCollector
@@ -135,28 +183,52 @@ def quantize_stack(params, cfg: ArchConfig, calib_tokens):
             collector=col)
     stats = Stats()
     stats.merge(jax.device_get(col.snapshot()))
+    quantize_layer = (R.quantize_gru_layer if rnn_cell(cfg) == "gru"
+                      else R.quantize_lstm_layer)
     return [
-        R.quantize_lstm_layer(p, lc, stats, prefix=f"l{i}/")
+        quantize_layer(p, lc, stats, prefix=f"l{i}/")
         for i, (p, lc) in enumerate(zip(params["lstm"], layer_cfgs(cfg)))
     ]
 
 
+def _quant_state_keys(states) -> Tuple[str, ...]:
+    """Cell state keys of a stacked quantized decode state (all but len).
+
+    Order comes from the dict, so use this ONLY where per-key handling is
+    order-independent -- under ``jax.jit`` dict pytrees iterate in SORTED
+    key order, not the cell's declared leaf order.
+    """
+    return tuple(k for k in states if k != "len")
+
+
+def _cell_state_keys(qlayers) -> Tuple[str, ...]:
+    """The cell's DECLARED state-leaf order (leaf 0 = output) -- what must
+    be used wherever the state dict is zipped with an ordered leaf tuple."""
+    from repro.core import cell as rc
+
+    spec = qlayers[0][1]
+    return rc.get_cell(spec).state_keys(spec)
+
+
 def init_quant_decode_state(qlayers, batch: int, per_slot_len: bool = False):
-    """Integer decode state: int8 hidden (at its zero point) + int16 cell.
+    """Integer decode state: every cell leaf at its declared reset value
+    (e.g. int8 hidden at its zero point, int16 cell at zero).
 
     ``per_slot_len=True`` tracks a per-row ``(batch,)`` token counter instead
     of one scalar -- what the continuous-batching engine needs, since every
     slot is at a different position in its stream.
     """
-    from repro.models.quant_lstm import _initial_state
+    from repro.core import cell as rc
+    from repro.models.quant_lstm import initial_recurrent_state
 
-    h, c = [], []
+    keys = rc.get_cell(qlayers[0][1]).state_keys(qlayers[0][1])
+    cols: Dict[str, list] = {k: [] for k in keys}
     for _, spec in qlayers:
-        h0, c0 = _initial_state(spec, batch, None, None)
-        h.append(h0)
-        c.append(c0)
-    length = jnp.zeros((batch,) if per_slot_len else (), jnp.int32)
-    return {"h": h, "c": c, "len": length}
+        for k, leaf in zip(keys, initial_recurrent_state(spec, batch)):
+            cols[k].append(leaf)
+    out: Dict[str, Any] = dict(cols)
+    out["len"] = jnp.zeros((batch,) if per_slot_len else (), jnp.int32)
+    return out
 
 
 def reset_quant_slot(qlayers, states, slot):
@@ -165,17 +237,19 @@ def reset_quant_slot(qlayers, states, slot):
     ``slot`` may be a traced int32 scalar: the continuous-batching engine
     jits this once and re-uses it for every admission.
     """
-    from repro.models.quant_lstm import reset_state_rows
+    from repro.models.quant_lstm import reset_recurrent_state_rows
 
-    h, c = [], []
-    for (_, spec), h_l, c_l in zip(qlayers, states["h"], states["c"]):
-        h_l, c_l = reset_state_rows(spec, h_l, c_l, slot)
-        h.append(h_l)
-        c.append(c_l)
+    keys = _cell_state_keys(qlayers)
+    out: Dict[str, Any] = {k: [] for k in keys}
+    for i, (_, spec) in enumerate(qlayers):
+        layer = tuple(states[k][i] for k in keys)
+        for k, leaf in zip(keys, reset_recurrent_state_rows(spec, layer, slot)):
+            out[k].append(leaf)
     length = states["len"]
     if length.ndim:
         length = length.at[slot].set(0)
-    return {"h": h, "c": c, "len": length}
+    out["len"] = length
+    return out
 
 
 def write_quant_slot(states, slot, row_state):
@@ -187,15 +261,17 @@ def write_quant_slot(states, slot, row_state):
     row computations are batch-independent.  ``slot`` may be a traced int32
     scalar: the engine jits this once and reuses it for every resume.
     """
-    h = [h_l.at[slot].set(r[0]) for h_l, r in zip(states["h"],
-                                                  row_state["h"])]
-    c = [c_l.at[slot].set(r[0]) for c_l, r in zip(states["c"],
-                                                  row_state["c"])]
+    out = {
+        k: [leaf.at[slot].set(r[0])
+            for leaf, r in zip(states[k], row_state[k])]
+        for k in _quant_state_keys(states)
+    }
     length = states["len"]
     if length.ndim:
         row_len = jnp.asarray(row_state["len"]).reshape(-1)[0]
         length = length.at[slot].set(row_len)
-    return {"h": h, "c": c, "len": length}
+    out["len"] = length
+    return out
 
 
 def slice_state(states, row):
@@ -207,11 +283,10 @@ def slice_state(states, row):
     """
     sl = slice(row, row + 1)
     length = states["len"]
-    return {
-        "h": [h[sl] for h in states["h"]],
-        "c": [c[sl] for c in states["c"]],
-        "len": length[sl] if length.ndim else length,
-    }
+    out = {k: [leaf[sl] for leaf in states[k]]
+           for k in _quant_state_keys(states)}
+    out["len"] = length[sl] if length.ndim else length
+    return out
 
 
 def stack_state(state_list):
@@ -220,50 +295,51 @@ def stack_state(state_list):
     Every state must come from the same ``qlayers``; scalar ``len`` entries
     are broadcast to one counter per stacked row.
     """
-    n_layers = len(state_list[0]["h"])
-    h = [jnp.concatenate([s["h"][i] for s in state_list], axis=0)
-         for i in range(n_layers)]
-    c = [jnp.concatenate([s["c"][i] for s in state_list], axis=0)
-         for i in range(n_layers)]
-    length = jnp.concatenate([
+    keys = _quant_state_keys(state_list[0])
+    n_layers = len(state_list[0][keys[0]])
+    out = {
+        k: [jnp.concatenate([s[k][i] for s in state_list], axis=0)
+            for i in range(n_layers)]
+        for k in keys
+    }
+    out["len"] = jnp.concatenate([
         s["len"] if s["len"].ndim else s["len"][None] for s in state_list])
-    return {"h": h, "c": c, "len": length}
+    return out
 
 
 def _quant_stack(params, qlayers, tokens, states, backend, valid_len=None):
-    """Run the integer LSTM stack over a ``(B, T)`` token block.
+    """Run the integer recurrent stack over a ``(B, T)`` token block.
 
     Each layer quantizes its float input with its own calibrated (s_x, zp_x),
     runs the hoisted two-stage integer executor (``backend`` = xla | pallas |
     interpret) -- the layer's whole ``(B, T)`` input block goes through one
     time-batched packed GEMM before the recurrent scan / persistent Pallas
     sequence kernel -- and dequantizes for the next layer.  Returns the
-    float stack output ``(B, T, d_proj)`` plus the new per-layer states.
+    float stack output ``(B, T, d_out)`` plus the new per-layer states.
 
     ``valid_len`` (int32 ``(B,)``) selects the ragged masked executor: row b
     consumes only its first ``valid_len[b]`` tokens and freezes its
-    per-layer ``(h, c)`` (and ``len`` counter) beyond that -- the chunked
+    per-layer state (and ``len`` counter) beyond that -- the chunked
     prefill path.  Outputs at positions ``>= valid_len[b]`` come from frozen
     state and must be ignored by the caller.
     """
     from repro.models import quant_lstm as QL
 
+    keys = _cell_state_keys(qlayers)
     x = emb.embed_tokens(params, tokens).astype(jnp.float32)
-    new_h, new_c = [], []
+    new_cols: Dict[str, list] = {k: [] for k in keys}
     for i, (arrays, spec) in enumerate(qlayers):
         x_q = QL.quantize_input(x, spec.s_x, spec.zp_x)
-        ys_q, (h, c) = QL.quant_lstm_layer(
-            arrays, spec, x_q, states["h"][i], states["c"][i],
+        ys_q, new_layer = QL.quant_recurrent_layer(
+            arrays, spec, x_q, tuple(states[k][i] for k in keys),
             backend=backend, valid_len=valid_len)
         x = QL.dequantize_output(ys_q, spec.s_h, spec.zp_h_out)
-        new_h.append(h)
-        new_c.append(c)
+        for k, leaf in zip(keys, new_layer):
+            new_cols[k].append(leaf)
     advanced = tokens.shape[1] if valid_len is None else valid_len
-    return x, {
-        "h": new_h,
-        "c": new_c,
-        "len": states["len"] + advanced,
-    }
+    out: Dict[str, Any] = dict(new_cols)
+    out["len"] = states["len"] + advanced
+    return x, out
 
 
 def quant_forward(params, qlayers, cfg: ArchConfig, tokens, states,

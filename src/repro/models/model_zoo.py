@@ -124,6 +124,9 @@ def build(cfg: ArchConfig) -> ModelBundle:
         loss = lambda p, b, c, mesh=None: whisper.loss_fn(p, cfg, b, c, mesh)
         init = functools.partial(whisper.init_params, cfg=cfg)
     elif fam == "lstm":
+        # the "lstm" family covers every QuantRecurrentCell-backed recurrent
+        # LM (lstm-rnnt, gru-rnnt, ...): lstm_lm dispatches the per-step math
+        # on cfg.rnn_cell, so one registration serves the whole cell zoo
         mod = lstm_lm
         prefill_fn = lambda p, b, c, mesh=None: lstm_lm.prefill(
             p, cfg, b["tokens"], c, mesh)

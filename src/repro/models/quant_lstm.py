@@ -16,6 +16,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import cell as rcell
 from repro.core import fixedpoint as fp
 from repro.core import integer_ops as iops
 from repro.core.recipe import QLSTMSpec
@@ -168,6 +169,57 @@ def reset_state_rows(
     return h_q, c_q
 
 
+def initial_recurrent_state(spec, batch: int) -> Tuple[jax.Array, ...]:
+    """t=0 state tuple for any registered cell (``core/cell.py``)."""
+    return rcell.get_cell(spec).init_state(spec, batch)
+
+
+def reset_recurrent_state_rows(
+    spec,
+    state: Tuple[jax.Array, ...],
+    row: jax.Array,
+) -> Tuple[jax.Array, ...]:
+    """Reset batch row ``row`` of one layer's decode state to t=0 (``row``
+    may be a traced scalar -- the engine's jitted slot reset)."""
+    return rcell.get_cell(spec).reset_rows(spec, state, row)
+
+
+def quant_recurrent_layer(
+    arrays: Dict[str, Any],
+    spec,
+    xs_q: jax.Array,
+    state0: Optional[Tuple[jax.Array, ...]] = None,
+    *,
+    backend: Optional[str] = None,
+    valid_len: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """Integer layer over time, any cell.  int8 (B, T, d_in) -> (B, T, d_out).
+
+    Dispatches through the two-stage hoisted sequence executor in
+    ``repro.kernels.ops``: the whole sequence's packed gate input product
+    runs as ONE time-batched int8 GEMM outside the recurrent loop, and the
+    scan consumes per-step int32 slices, leaving only the recurrent matmul +
+    cell update on the sequential path.  ``backend`` selects how the
+    recurrent stage lowers -- ``"xla"`` (default: ``lax.scan``), ``"pallas"``
+    (TPU: the persistent sequence kernel, one launch per layer with the
+    state tuple in VMEM scratch), or ``"interpret"`` (the same kernel on the
+    Pallas interpreter, CPU); all three are bit-exact with each other.
+
+    ``valid_len`` (int32 ``(B,)``) selects the ragged masked executor: row b
+    advances only for timesteps ``t < valid_len[b]`` and keeps its state
+    frozen beyond that -- the chunked-prefill path of the serving engine.
+    """
+    if state0 is None:
+        state0 = initial_recurrent_state(spec, xs_q.shape[0])
+    if valid_len is not None:
+        return kops.quant_recurrent_seq_masked(
+            arrays, spec, xs_q, state0, valid_len, backend=backend
+        )
+    return kops.quant_recurrent_seq(
+        arrays, spec, xs_q, state0, backend=backend
+    )
+
+
 def quant_lstm_layer(
     arrays: Dict[str, Any],
     spec: QLSTMSpec,
@@ -178,31 +230,12 @@ def quant_lstm_layer(
     backend: Optional[str] = None,
     valid_len: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """Integer layer over time.  xs_q: int8 (B, T, d_in) -> int8 (B, T, d_out).
-
-    Dispatches through the two-stage hoisted sequence executor in
-    ``repro.kernels.ops``: the whole sequence's packed ``[i|f|z|o]`` input
-    product runs as ONE time-batched int8 GEMM outside the recurrent loop,
-    and the scan consumes per-step int32 slices, leaving only the recurrent
-    matmul + fused cell update on the sequential path.  ``backend`` selects
-    how the recurrent stage lowers -- ``"xla"`` (default: ``lax.scan``),
-    ``"pallas"`` (TPU: the persistent sequence kernel, one launch per layer
-    with the carry in VMEM scratch), or ``"interpret"`` (the same kernel on
-    the Pallas interpreter, CPU); all three are bit-exact with each other
-    and with the per-gate reference executor (``quant_lstm_layer_ref``).
-
-    ``valid_len`` (int32 ``(B,)``) selects the ragged masked executor: row b
-    advances only for timesteps ``t < valid_len[b]`` and keeps its ``(h, c)``
-    frozen beyond that -- the chunked-prefill path of the serving engine.
-    """
+    """LSTM-shaped wrapper over ``quant_recurrent_layer`` (pre-PR-8
+    signature; bit-exact with the per-gate ``quant_lstm_layer_ref``)."""
     h0_q, c0_q = _initial_state(spec, xs_q.shape[0], h0_q, c0_q)
-    if valid_len is not None:
-        return kops.quant_lstm_seq_masked(
-            arrays, spec, xs_q, h0_q, c0_q, valid_len, backend=backend
-        )
-    return kops.quant_lstm_seq(
-        arrays, spec, xs_q, h0_q, c0_q, backend=backend
-    )
+    return quant_recurrent_layer(
+        arrays, spec, xs_q, (h0_q, c0_q),
+        backend=backend, valid_len=valid_len)
 
 
 def quant_lstm_layer_ref(

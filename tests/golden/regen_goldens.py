@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Regenerate tests/golden/lstm_goldens.json.
+"""Regenerate tests/golden/lstm_goldens.json + gru_goldens.json.
 
     PYTHONPATH=src python tests/golden/regen_goldens.py
 
@@ -14,10 +14,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 from repro.testing import golden  # noqa: E402
 
-OUT = os.path.join(os.path.dirname(__file__), "lstm_goldens.json")
+LSTM_OUT = os.path.join(os.path.dirname(__file__), "lstm_goldens.json")
+GRU_OUT = os.path.join(os.path.dirname(__file__), "gru_goldens.json")
 
 if __name__ == "__main__":
-    golden.write_goldens(OUT)
-    data = golden.load_goldens(OUT)
-    print(f"wrote {OUT}: {len(data['variants'])} layer variants + "
+    golden.write_goldens(LSTM_OUT)
+    data = golden.load_goldens(LSTM_OUT)
+    print(f"wrote {LSTM_OUT}: {len(data['variants'])} layer variants + "
           f"lm tokens {data['lm']['tokens']}")
+    golden.write_goldens(GRU_OUT, generate=golden.generate_gru_goldens)
+    data = golden.load_goldens(GRU_OUT)
+    print(f"wrote {GRU_OUT}: {len(data['variants'])} layer variants + "
+          f"lm tokens {data['lm']['tokens']} + "
+          f"{len(data['engine'])} engine cases")

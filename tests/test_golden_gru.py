@@ -1,0 +1,114 @@
+"""GRU golden bit-exactness + engine-vs-single-stream regression tests.
+
+``tests/golden/gru_goldens.json`` pins the integer outputs of both GRU
+variants (LN x), the greedy tokens of the smoke ``gru-rnnt`` LM decode, and
+the per-stream tokens of a fixed workload served through the
+continuous-batching engine under ``{fifo, srf} x oversubscription`` -- the
+PR-8 acceptance gate that the cell-agnostic engine serves a second cell
+with zero serving-layer changes.  Every engine case is additionally
+asserted bit-identical to ``decode_single`` (the scheduler-free oracle), so
+chunked prefill, preemption through the paged state pool, and resume all
+hold for a single-leaf (``h``-only) recurrent state.  Regenerate only for
+intentional numerics changes:
+``PYTHONPATH=src python tests/golden/regen_goldens.py``.
+"""
+import os
+
+import pytest
+
+import jax
+
+from repro.launch import engine as E
+from repro.models import gru as GR
+from repro.testing import golden
+
+pytestmark = pytest.mark.fast
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "gru_goldens.json")
+GOLDENS = golden.load_goldens(GOLDEN_PATH)
+
+BACKENDS = ("xla", "interpret")
+
+
+@pytest.fixture(scope="module")
+def lm_case():
+    return golden.build_lm_case("gru-rnnt")
+
+
+@pytest.mark.parametrize("variant", GR.ALL_VARIANTS, ids=lambda v: v.name)
+def test_gru_variant_layer_matches_golden(variant):
+    """Both backends must reproduce the checked-in integers exactly (only
+    two GRU variants, so no interpret subset is needed)."""
+    want = GOLDENS["variants"][golden.gru_variant_key(variant)]
+    case = golden.build_gru_variant_case(variant)
+    for backend in BACKENDS:
+        got = golden.execute_case(case, backend)
+        for key in ("ys", "h"):
+            assert got[key] == want[key], \
+                f"{variant.name}/{backend}: {key} drifted"
+
+
+def test_gru_goldens_cover_all_variants():
+    assert set(GOLDENS["variants"]) == {
+        golden.gru_variant_key(v) for v in GR.ALL_VARIANTS}
+    # single-leaf state: the layer golden is {ys, h}, no cell carry
+    for case in GOLDENS["variants"].values():
+        assert set(case) == {"ys", "h"}
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_gru_lm_decode_matches_golden(backend):
+    """End-to-end stacked GRU LM greedy decode: tokens AND final h."""
+    got = golden.run_lm_case(backend=backend, arch="gru-rnnt")
+    want = GOLDENS["lm"]
+    assert got["tokens"] == want["tokens"], f"{backend}: tokens drifted"
+    assert got["h"] == want["h"], f"{backend}: final h drifted"
+    assert "c" not in got
+
+
+@pytest.mark.parametrize("policy,ratio", golden.ENGINE_GOLDEN_CASES,
+                         ids=lambda p: str(p))
+def test_gru_engine_matches_golden_and_decode_single(lm_case, policy, ratio):
+    """The fixed workload through the engine: tokens must match BOTH the
+    checked-in golden and a fresh ``decode_single`` of every stream --
+    preemption/resume of the single-leaf GRU state is bit-exact."""
+    params, qlayers, cfg, _ = lm_case
+    got = golden.run_engine_case("gru-rnnt", policy, ratio, backend="xla",
+                                 built=lm_case)
+    want = GOLDENS["engine"][f"{policy}-{ratio}"]
+    assert got == want, f"{policy}-{ratio}: engine tokens drifted"
+    for req in golden.engine_trace(cfg):
+        single = E.decode_single(params, qlayers, cfg, req.prompt,
+                                 req.max_new_tokens, backend="xla")
+        assert got[str(req.rid)] == single, \
+            f"{policy}-{ratio}: stream {req.rid} != decode_single"
+
+
+def test_gru_engine_chunked_prefill_matches_plain(lm_case):
+    """Chunked prefill (one masked (S, K) dispatch) must not change any
+    GRU stream's tokens -- the ragged masked executor freezes the
+    single-leaf state exactly like the LSTM's two leaves."""
+    params, qlayers, cfg, _ = lm_case
+    plain = golden.run_engine_case("gru-rnnt", "fifo", 1.0, built=lm_case)
+    requests = golden.engine_trace(cfg)
+    eng = E.ContinuousBatchingEngine(
+        params, qlayers, cfg, n_slots=golden.ENGINE_SLOTS, backend="xla",
+        chunk=4, policy="fifo", oversubscribe=1.0)
+    eng.submit_all(requests)
+    results, _ = eng.run()
+    assert {str(r): list(res.tokens) for r, res in results.items()} == plain
+
+
+def test_gru_pool_reports_single_leaf_bytes(lm_case):
+    """Generic bytes-per-stream: a parked GRU stream is one int8 h row per
+    layer + the int32 len counter -- no phantom cell-state bytes."""
+    from repro.launch.state_pool import StatePool
+    from repro.models import lstm_lm
+
+    params, qlayers, cfg, _ = lm_case
+    state = lstm_lm.init_quant_decode_state(qlayers, 1)
+    pool = StatePool()
+    pool.put("s", jax.device_get(lstm_lm.slice_state(state, 0)))
+    want = sum(spec.cfg_d_hidden for _, spec in qlayers) + 4
+    assert pool.state_bytes_per_stream == want

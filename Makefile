@@ -23,11 +23,22 @@ TTFT_BAR ?= 2.0
 POLICY ?= srf
 OVERSUB ?= 3.0
 PREEMPT_GATE ?= 1.2
+# fleet knobs: shard count, open-loop request count, and the goodput
+# retention gate of the faulted leg (tokens per fleet STEP, so the gate is
+# deterministic for a given workload + injector seed -- CI-safe)
+SHARDS ?= 2
+FLEET_REQUESTS ?= 24
+FLEET_GATE ?= 0.7
+# fault + gate flags of the fleet smoke leg; CI's 1-shard no-fault leg
+# overrides this with an empty string (killing the only shard would just
+# measure dead air, and the retention gate needs a faulted leg to compare)
+FLEET_FAULT ?= --kill-frac 0.5 --kill-restart 24 --check-retention $(FLEET_GATE)
 
 .PHONY: check test collect bench prefill-bench prefill-bench-smoke \
 	engine-smoke scheduler-smoke engine-bench engine-ttft-bench \
 	spec-bench spec-bench-smoke preempt-bench preempt-bench-smoke \
-	zoo-smoke zoo-bench zoo-bench-smoke
+	zoo-smoke zoo-bench zoo-bench-smoke fleet-smoke fleet-bench \
+	fleet-bench-smoke
 
 collect:
 	$(PYTEST) -q --collect-only >/dev/null
@@ -125,6 +136,37 @@ preempt-bench-smoke:
 		--backend $(SERVE_BACKEND) --policy $(POLICY) \
 		--oversubscribe $(OVERSUB) \
 		--check-speedup $(PREEMPT_GATE) --out BENCH_preempt_smoke.json
+
+# fleet smoke: the serve CLI through the admission router with a seeded
+# mid-flight shard kill -- recovery (state migration + prefix replay) runs
+# on every invocation, not just in tests
+fleet-smoke:
+	timeout 600 env PYTHONPATH=src $(PY) -m repro.launch.serve \
+		--arch lstm-rnnt --smoke --quant int8-lstm --engine \
+		--shards $(SHARDS) --slots 2 --requests 12 \
+		--prompt-len 8 --gen 8 --backend $(SERVE_BACKEND) \
+		--fault-spec '{"kills": [{"shard": 0, "at_frac": 0.5, "restart_after": 24}]}'
+
+# open-loop SLO benchmark: Poisson arrivals / heavy-tailed lengths through
+# the fleet, no-fault leg vs 1-shard-killed-at-50%-progress leg,
+# bit-exactness on every completed stream (kills, migrations, and replays
+# included) and the goodput-retention gate >= FLEET_GATE; writes
+# BENCH_fleet.json
+fleet-bench:
+	PYTHONPATH=src $(PY) benchmarks/fleet_load.py \
+		--shards $(SHARDS) --slots 2 --requests $(FLEET_REQUESTS) \
+		--kill-frac 0.5 --kill-restart 24 \
+		--check-retention $(FLEET_GATE) --out BENCH_fleet.json
+
+# CI smoke: same gate machinery, bounded wall time; proves the retention
+# gate end-to-end on every push (goodput is tokens per fleet step --
+# deterministic, so the relaxed-runner caveat of the wall-clock gates does
+# not apply here)
+fleet-bench-smoke:
+	timeout 1800 env PYTHONPATH=src $(PY) benchmarks/fleet_load.py \
+		--shards $(SHARDS) --slots 2 --requests $(FLEET_REQUESTS) \
+		--backend $(SERVE_BACKEND) $(FLEET_FAULT) \
+		--out BENCH_fleet_smoke.json
 
 # GRU leg of the cell zoo (PR 8): serve the gru-rnnt smoke stack through
 # the unchanged continuous-batching engine, then replay the checked-in GRU

@@ -1,0 +1,281 @@
+"""Open-loop SLO benchmark for the fault-tolerant fleet tier.
+
+A Poisson arrival process with heavy-tailed prompt/generation lengths is
+served through ``launch/fleet.py``'s admission router over N shards, twice:
+
+  * **no-fault leg** -- the capacity baseline;
+  * **faulted leg** (``--kill-frac``) -- the SAME workload and seed, with a
+    seeded ``FaultInjector`` killing one shard once fleet generation
+    progress passes the given fraction (optionally restarting it
+    ``--kill-restart`` fleet steps later).  In-flight streams on the dead
+    shard migrate with state or replay their prefix onto survivors.
+
+Reported per leg: p50/p99 TTFT (fleet steps -- arrival to first token, so
+queueing and recovery delay are inside the number -- plus wall seconds),
+tokens/s, and the deterministic goodput **tokens per fleet step** the
+retention gate uses (wall-clock goodput is too noisy on shared CI runners).
+Every completed stream in BOTH legs is asserted bit-identical to
+``decode_single`` of its original request -- shard kills, migrations, and
+replays included -- with a hard exit (not an assert) after the artifact is
+written, so a drifting run still leaves numbers to debug with.
+
+    PYTHONPATH=src python benchmarks/fleet_load.py --shards 2 --slots 2 \
+        --requests 24 --kill-frac 0.5 --check-retention 0.7 \
+        --out BENCH_fleet.json
+
+    # multi-device CPU meshes (flag is read BEFORE jax initializes):
+    PYTHONPATH=src python benchmarks/fleet_load.py --shards 2 \
+        --host-devices 4 ...
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# --host-devices must land in XLA_FLAGS before jax ever initializes, so it
+# is scanned from argv ahead of any jax-importing module
+if "--host-devices" in sys.argv:
+    _n = sys.argv[sys.argv.index("--host-devices") + 1]
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(_n)}")
+
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, "src")
+
+from repro.launch import engine as E  # noqa: E402
+from repro.launch import fleet as F  # noqa: E402
+from repro.runtime import sharding as shlib  # noqa: E402
+
+from engine_throughput import build_quantized_lm  # noqa: E402
+
+
+def open_loop_trace(cfg, *, n, rate, seed, prompt_med=6, gen_med=8,
+                    prompt_cap=24, gen_cap=32):
+    """Poisson arrivals (exponential inter-arrival, mean ``1/rate`` fleet
+    steps) with lognormal prompt/generation lengths clipped to caps --
+    mostly short streams plus an occasional long one, the heavy tail that
+    makes a mid-flight shard kill actually strand work."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for rid in range(n):
+        t += rng.exponential(1.0 / rate)
+        plen = int(np.clip(round(rng.lognormal(np.log(prompt_med), 0.6)),
+                           1, prompt_cap))
+        gen = int(np.clip(round(rng.lognormal(np.log(gen_med), 0.6)),
+                          1, gen_cap))
+        toks = rng.integers(0, cfg.vocab_size, size=(plen,), dtype=np.int64)
+        out.append(E.Request(rid=rid, prompt=toks.astype(np.int32),
+                             max_new_tokens=gen, arrival=float(int(t))))
+    return out
+
+
+def pctl(xs, q):
+    if not xs:
+        return None
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(len(xs) * q))]
+
+
+def run_leg(params, qlayers, cfg, requests, args, injector):
+    meshes = shlib.fleet_meshes(args.shards)
+    router = F.FleetRouter(
+        params, qlayers, cfg, n_shards=args.shards,
+        slots_per_shard=args.slots, backend=args.backend, chunk=args.chunk,
+        policy=args.policy, oversubscribe=args.oversubscribe,
+        injector=injector, meshes=meshes)
+    router.warmup()
+    router.submit_all([
+        E.Request(rid=r.rid, prompt=r.prompt,
+                  max_new_tokens=r.max_new_tokens, arrival=r.arrival)
+        for r in requests])
+    results, stats = router.run()
+    return results, stats, sum(m is not None for m in meshes)
+
+
+def leg_summary(results, stats):
+    done = [r for r in results.values()
+            if not r.rejected and not r.truncated]
+    ttft_steps = [r.ttft_steps for r in done if r.ttft_steps is not None]
+    ttft_s = [r.ttft_s for r in done if r.ttft_s is not None]
+    return {
+        "completed": stats.completed,
+        "rejected": stats.rejected,
+        "lost": stats.lost,
+        "fleet_steps": stats.fleet_steps,
+        "generated_tokens": stats.generated_tokens,
+        "goodput_tokens_per_step": round(stats.goodput_tokens_per_step, 4),
+        "tokens_per_s": round(stats.tokens_per_s, 1),
+        "ttft_p50_steps": pctl(ttft_steps, 0.50),
+        "ttft_p99_steps": pctl(ttft_steps, 0.99),
+        "ttft_p50_s": round(pctl(ttft_s, 0.50), 4) if ttft_s else None,
+        "ttft_p99_s": round(pctl(ttft_s, 0.99), 4) if ttft_s else None,
+        "kills": stats.kills,
+        "restarts": stats.restarts,
+        "migrated_streams": stats.migrated_streams,
+        "replayed_streams": stats.replayed_streams,
+        "rerouted_pending": stats.rerouted_pending,
+        "admit_retries": stats.admit_retries,
+        "shard_occupancy": [round(s.occupancy(stats.n_slots), 3)
+                            for s in stats.shards],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=2,
+                    help="decode-batch rows per shard")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="mean arrivals per fleet step (Poisson)")
+    ap.add_argument("--policy", default="srf")
+    ap.add_argument("--oversubscribe", type=float, default=2.0)
+    ap.add_argument("--chunk", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "interpret"])
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N host CPU devices (XLA_FLAGS; must be set "
+                         "before jax starts, which this flag guarantees) so "
+                         "each shard gets a real disjoint mesh")
+    ap.add_argument("--kill-frac", type=float, default=None,
+                    help="run a second, faulted leg: kill one shard once "
+                         "this fraction of all requested tokens has been "
+                         "generated (0.5 = mid-flight)")
+    ap.add_argument("--kill-shard", type=int, default=0)
+    ap.add_argument("--kill-restart", type=int, default=24,
+                    help="restart the killed shard after this many fleet "
+                         "steps (-1 = never; it stays dead)")
+    ap.add_argument("--graceful", action="store_true",
+                    help="graceful drain instead of a hard kill (every "
+                         "stream migrates with state; none replay)")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON artifact here (BENCH_fleet.json)")
+    ap.add_argument("--check-retention", type=float, default=None,
+                    help="exit nonzero unless faulted goodput (tokens per "
+                         "fleet step) / no-fault goodput >= this")
+    args = ap.parse_args()
+    if args.kill_frac is not None and not 0.0 <= args.kill_frac <= 1.0:
+        ap.error("--kill-frac must be in [0, 1]")
+    if args.kill_frac is not None and \
+            not 0 <= args.kill_shard < args.shards:
+        ap.error("--kill-shard out of range")
+
+    params, qlayers, cfg = build_quantized_lm(args.backend)
+    requests = open_loop_trace(cfg, n=args.requests, rate=args.rate,
+                               seed=args.seed)
+    offered = sum(r.max_new_tokens for r in requests)
+
+    base_results, base_stats, meshed = run_leg(
+        params, qlayers, cfg, requests, args, injector=None)
+    base = leg_summary(base_results, base_stats)
+
+    faulted = None
+    fault_results = {}
+    if args.kill_frac is not None:
+        inj = F.FaultInjector(seed=args.seed, kills=[F.KillSpec(
+            shard=args.kill_shard, at_frac=args.kill_frac,
+            graceful=args.graceful,
+            restart_after=(None if args.kill_restart < 0
+                           else args.kill_restart))])
+        fault_results, fault_stats, _ = run_leg(
+            params, qlayers, cfg, requests, args, injector=inj)
+        faulted = leg_summary(fault_results, fault_stats)
+
+    # bit-exactness: every COMPLETED stream in both legs must match
+    # decode_single of its original request -- migrations and replays
+    # included (verdict computed now, enforced after the artifact lands)
+    drifted = []
+    ref = {}
+    for r in requests:
+        ref[r.rid] = E.decode_single(params, qlayers, cfg, r.prompt,
+                                     r.max_new_tokens,
+                                     backend=args.backend)
+        for leg, res in (("nofault", base_results),
+                         ("faulted", fault_results)):
+            fr = res.get(r.rid)
+            if fr is not None and not fr.rejected and not fr.truncated \
+                    and fr.tokens != ref[r.rid]:
+                drifted.append((leg, r.rid))
+
+    retention = None
+    if faulted is not None and base["goodput_tokens_per_step"]:
+        retention = (faulted["goodput_tokens_per_step"]
+                     / base["goodput_tokens_per_step"])
+
+    print(f"fleet_load,arch={cfg.name},backend={args.backend},"
+          f"shards={args.shards},slots={args.slots},"
+          f"requests={len(requests)},offered_tokens={offered},"
+          f"rate={args.rate},policy={args.policy},"
+          f"oversubscribe={args.oversubscribe},meshes={meshed}")
+    for name, leg in (("nofault", base), ("faulted", faulted)):
+        if leg is None:
+            continue
+        print(f"fleet_load/{name},completed={leg['completed']},"
+              f"rejected={leg['rejected']},lost={leg['lost']},"
+              f"goodput={leg['goodput_tokens_per_step']},"
+              f"tok_s={leg['tokens_per_s']},"
+              f"ttft_p50={leg['ttft_p50_steps']},"
+              f"ttft_p99={leg['ttft_p99_steps']},"
+              f"kills={leg['kills']},restarts={leg['restarts']},"
+              f"migrated={leg['migrated_streams']},"
+              f"replayed={leg['replayed_streams']}")
+    if retention is not None:
+        print(f"fleet_load/retention,{retention:.3f}")
+
+    if args.out:
+        artifact = {
+            "bench": "fleet_load",
+            "arch": cfg.name,
+            "backend": args.backend,
+            "shards": args.shards,
+            "slots_per_shard": args.slots,
+            "requests": len(requests),
+            "offered_tokens": offered,
+            "rate": args.rate,
+            "policy": args.policy,
+            "oversubscribe": args.oversubscribe,
+            "meshed_shards": meshed,
+            "kill": (None if args.kill_frac is None else {
+                "shard": args.kill_shard, "at_frac": args.kill_frac,
+                "graceful": args.graceful,
+                "restart_after": (None if args.kill_restart < 0
+                                  else args.kill_restart)}),
+            "nofault": base,
+            "faulted": faulted,
+            "goodput_retention": (round(retention, 3)
+                                  if retention is not None else None),
+            "bitexact": not drifted,
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
+
+    # hard exits, not asserts, so `python -O` can't skip the gates
+    if drifted:
+        leg, rid = drifted[0]
+        raise SystemExit(f"FAIL: {leg} leg drifted from decode_single on "
+                         f"stream {rid} ({len(drifted)} drifting streams)")
+    if args.kill_frac is not None and faulted["kills"] < 1:
+        raise SystemExit("FAIL: faulted leg never killed a shard (workload "
+                         "finished before --kill-frac progress; raise "
+                         "--requests or lower --kill-frac)")
+    if args.check_retention is not None:
+        if retention is None:
+            raise SystemExit("FAIL: --check-retention needs --kill-frac "
+                             "(no faulted leg was run)")
+        if retention < args.check_retention:
+            print(f"FAIL: goodput retention {retention:.3f} < required "
+                  f"{args.check_retention:.3f}")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,6 +59,7 @@ from repro.launch.scheduler import (Decision, Scheduler, StreamView,
 from repro.launch.spec_decode import Drafter, NGramDrafter
 from repro.launch.state_pool import StatePool
 from repro.models import lstm_lm
+from repro.runtime.fault import StepWatchdog
 
 
 @dataclasses.dataclass
@@ -179,6 +180,11 @@ class EngineStats:
     rejected: int = 0  # requests refused admission (rejection policies)
     peak_live: int = 0  # peak live streams (resident + pooled) in one step
     pool_state_bytes: int = 0  # host bytes one parked stream occupies
+    # watchdog verdicts for THIS run call (both 0 when no watchdog is wired):
+    # dispatched steps whose wall time exceeded straggler_factor x EMA /
+    # timeout_factor x EMA (runtime.fault.StepWatchdog)
+    stragglers: int = 0
+    hung: int = 0
 
     @property
     def occupancy(self) -> float:
@@ -244,6 +250,31 @@ class _Stream:
         if self.fed < p.size:
             return int(p[self.fed])  # teacher-forced prefill
         return self.generated[self.fed - p.size]  # fed-back generation
+
+
+@dataclasses.dataclass
+class MigratedStream:
+    """One stream drained out of an engine for re-admission elsewhere
+    (``launch/fleet.py`` shard-kill recovery).
+
+    ``state_row`` is the host-side batch-1 state pytree when it survived --
+    the stream was parked in the host pool, or the drain ran with the device
+    still alive -- and the receiving engine adopts it through the same
+    ``pool.take -> jitted slot write`` resume path user preemption uses, so
+    continuation is bit-exact (integer state, nothing re-rounds).  ``None``
+    means the device state died with the shard: the stream must be REPLAYED
+    by teacher-forcing its prompt + already-generated prefix (bit-exact by
+    determinism, at the cost of re-ingesting the prefix).  ``pending`` marks
+    a request that never started (no state, no replay cost -- re-route it).
+    """
+
+    request: Request
+    fed: int
+    generated: List[int]
+    state_row: Optional[Dict[str, Any]]
+    drafter: Optional[Drafter]
+    preemptions: int
+    pending: bool = False
 
 
 _ENGINE_FNS: Dict[Tuple[int, str], Tuple[Any, ...]] = {}
@@ -410,13 +441,23 @@ class ContinuousBatchingEngine:
     swap-in rows via ``pool_row_shardings``, so the slot dim spreads
     consistently over the data-parallel mesh axes with no resharding on the
     hot loop.
+
+    ``watchdog``: optional ``runtime.fault.StepWatchdog`` -- every dispatched
+    engine step's wall time is ``observe``-d and the resulting straggler /
+    hung verdict counts surface in ``EngineStats`` (per ``run`` call).  The
+    fleet router (``launch/fleet.py``) treats a hung verdict as a fault-plane
+    event.  ``step_hook``: optional callable invoked with the engine step
+    index at the top of every dispatched step, INSIDE the watchdog's timed
+    window -- the fault-injection seam (a hook that sleeps simulates a hung
+    device; the watchdog must flag it).
     """
 
     def __init__(self, params, qlayers, cfg, n_slots: int, *,
                  backend: str = "xla", chunk: int = 1, speculate: int = 0,
                  drafter_factory=None, policy: Union[str, Scheduler] = "fifo",
                  oversubscribe: float = 1.0, pool_page_size: int = 8,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None,
+                 watchdog: Optional[StepWatchdog] = None, step_hook=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if chunk < 1:
@@ -442,6 +483,8 @@ class ContinuousBatchingEngine:
         self._drafter_factory = (
             drafter_factory if drafter_factory is not None
             else NGramDrafter)
+        self.watchdog = watchdog
+        self._step_hook = step_hook
         # stream bookkeeping: pending queue (submission order), live streams
         # keyed by rid, slot -> rid map, pool parking order, parked (user-
         # evicted, resumable) streams
@@ -727,6 +770,103 @@ class ContinuousBatchingEngine:
         self._streams[rid] = s
         self._pool_order.append(rid)
 
+    # -- fleet migration: drain this engine / adopt another's streams -------
+
+    def export_streams(self, *, device_alive: bool = True
+                       ) -> List[MigratedStream]:
+        """Drain every queued and live stream for re-admission elsewhere,
+        leaving this engine empty (the fleet router calls this when a shard
+        dies or is being retired).
+
+        ``device_alive=True`` models a graceful drain (watchdog-flagged
+        shard, planned retirement): resident streams' slot rows are sliced
+        to host first, so EVERY stream migrates with its state.  With
+        ``device_alive=False`` (hard kill: the accelerator died) resident
+        streams lose their device state (``state_row=None`` -> replay);
+        pooled streams still migrate -- their pages are host memory and
+        survive the device.  User-parked streams (``evict(preserve=True)``)
+        are NOT exported: the caller holds their handle and decides.
+        """
+        out: List[MigratedStream] = []
+        for req in self._queue:
+            out.append(MigratedStream(
+                request=req, fed=0, generated=[], state_row=None,
+                drafter=None, preemptions=0, pending=True))
+        self._queue.clear()
+        for rid, s in list(self._streams.items()):
+            if s.slot is not None:
+                row = (jax.device_get(lstm_lm.slice_state(self._state,
+                                                          s.slot))
+                       if device_alive else None)
+                self._slot_rid[s.slot] = None
+                s.slot = None
+            else:
+                row = self.pool.take(rid)
+            out.append(MigratedStream(
+                request=s.request, fed=s.fed, generated=list(s.generated),
+                state_row=row, drafter=s.drafter,
+                preemptions=s.preemptions))
+        self._streams.clear()
+        self._pool_order.clear()
+        return out
+
+    def adopt_stream(self, request: Request, *, state_row, fed: int,
+                     generated: Sequence[int] = (), drafter=None,
+                     preemptions: int = 0) -> None:
+        """Admit a mid-flight stream WITH its integer state (fleet migration
+        after a shard death or drain).
+
+        The state row enters the pool and the scheduler restores it into a
+        free slot through the same ``pool.take -> jitted slot write`` path
+        preemption uses, so the stream continues bit-exactly as if it had
+        never moved -- the recovery primitive only a
+        constant-few-hundred-bytes integer state makes affordable.  Streams
+        whose state died with their device are NOT adopted: replay them by
+        folding the generated prefix into a fresh request's prompt
+        (teacher-forcing reproduces the state bit-exactly).
+        """
+        taken = {r.rid for r in self._queue}
+        taken.update(self._streams)
+        taken.update(self._parked)
+        if request.rid in taken:
+            raise ValueError(f"duplicate request id {request.rid}")
+        if state_row is None:
+            raise ValueError(
+                f"stream {request.rid}: adopt_stream needs a state row; "
+                f"replay state-less streams via submit() with the generated "
+                f"prefix folded into the prompt")
+        gen = list(generated)
+        if len(gen) >= request.max_new_tokens:
+            raise ValueError(
+                f"stream {request.rid}: already generated {len(gen)} of "
+                f"{request.max_new_tokens} tokens -- nothing to adopt")
+        if not 0 <= fed <= int(request.prompt.size) + max(len(gen) - 1, 0):
+            raise ValueError(
+                f"stream {request.rid}: fed={fed} inconsistent with "
+                f"prompt_len={int(request.prompt.size)} + "
+                f"{len(gen)} generated")
+        if self.speculate and drafter is None:
+            # a migrating stream entering a speculating engine without its
+            # drafter rebuilds one from its full observed history
+            drafter = self._drafter_factory()
+            drafter.reset()
+            drafter.observe(request.prompt.tolist() + gen)
+        s = _Stream(
+            request=request, fed=fed, generated=gen,
+            admitted_step=self._step, admit_wall=time.perf_counter(),
+            drafter=drafter, preemptions=preemptions)
+        self._streams[request.rid] = s
+        self._submit_idx[request.rid] = self._n_submitted
+        self._n_submitted += 1
+        self.pool.put(request.rid, state_row)
+        self._pool_order.append(request.rid)
+        self.schedule_log.append((self._step, "adopt", request.rid, -1))
+
+    def live_progress(self) -> Dict[int, int]:
+        """{rid: generated-token count} for every live stream -- the fleet
+        router's cheap per-step poll for first-token (TTFT) stamping."""
+        return {rid: len(s.generated) for rid, s in self._streams.items()}
+
     # -- the serving loop ---------------------------------------------------
 
     def _result(self, stream: _Stream, finished_step: int, now: float,
@@ -780,6 +920,8 @@ class ContinuousBatchingEngine:
         self._n_preempts = 0
         self._n_resumes = 0
         self._n_rejects = 0
+        wd = self.watchdog
+        wd_before = (wd.stragglers, wd.hung) if wd is not None else (0, 0)
         t0 = time.perf_counter()
         while self._queue or self._streams:
             if max_steps is not None and ran >= max_steps:
@@ -788,10 +930,17 @@ class ContinuousBatchingEngine:
             peak_live = max(peak_live, len(self._streams))
             if not any(rid is not None for rid in self._slot_rid):
                 # nothing runnable (all arrivals in the future): the step
-                # passes idle -- no dispatch, no active accounting
+                # passes idle -- no dispatch, no active accounting (and no
+                # watchdog observation -- an idle step's wall time says
+                # nothing about device health)
                 self._step += 1
                 ran += 1
                 continue
+            step_t0 = time.perf_counter()
+            if self._step_hook is not None:
+                # fault-injection seam: runs INSIDE the watchdog's timed
+                # window, so an injected sleep reads as a hung device
+                self._step_hook(self._step)
             # speculative drafts: ask each generating stream's drafter for
             # up to k candidates, capped so even a fully-accepted block
             # lands exactly on the stream's remaining budget (a stream one
@@ -940,6 +1089,8 @@ class ContinuousBatchingEngine:
                     generated += len(s.generated)
                     self._slot_rid[i] = None  # evict mid-flight
                     del self._streams[req.rid]
+            if wd is not None:
+                wd.observe(time.perf_counter() - step_t0)
             self._step += 1
             ran += 1
         # hitting max_steps leaves streams in flight: by default return
@@ -992,6 +1143,9 @@ class ContinuousBatchingEngine:
             rejected=self._n_rejects,
             peak_live=peak_live,
             pool_state_bytes=self.pool.state_bytes_per_stream,
+            stragglers=(wd.stragglers - wd_before[0]
+                        if wd is not None else 0),
+            hung=wd.hung - wd_before[1] if wd is not None else 0,
         )
         return results, stats
 

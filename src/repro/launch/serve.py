@@ -38,6 +38,23 @@ and mean accepted tokens per verify step.
     PYTHONPATH=src python -m repro.launch.serve --arch lstm-rnnt --smoke \
         --quant int8-lstm --engine --slots 8 --requests 16 --chunk 4 \
         --speculate 4
+
+Fleet mode (``--shards N``, requires ``--engine``): the same workload served
+through ``launch/fleet.py``'s admission router over N per-shard engines --
+least-loaded routing, capped retry/backoff on transient admission failures,
+fifo-reject degradation when saturated, and shard-kill recovery that
+migrates or replays every in-flight stream bit-exactly.  ``--fault-spec``
+takes a JSON object (inline, or ``@path/to/spec.json``) in the
+``FaultInjector.from_spec`` schema:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch lstm-rnnt --smoke \
+        --quant int8-lstm --engine --shards 2 --slots 4 --requests 16 \
+        --fault-spec '{"kills": [{"shard": 0, "at_frac": 0.5}]}'
+
+Each shard gets its own disjoint device mesh when the host exposes enough
+devices (``runtime.sharding.fleet_meshes``; on CPU set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` BEFORE jax starts),
+and shares the default device otherwise.
 """
 from __future__ import annotations
 
@@ -157,6 +174,86 @@ def _serve_engine(args, cfg) -> None:
     print("sample:", first.tokens)
 
 
+def _load_fault_spec(raw):
+    """``--fault-spec`` value -> FaultInjector (inline JSON or @file)."""
+    import json
+
+    from repro.launch import fleet as F
+
+    if raw is None:
+        return None
+    if raw.startswith("@"):
+        with open(raw[1:]) as f:
+            spec = json.load(f)
+    else:
+        spec = json.loads(raw)
+    if not isinstance(spec, dict):
+        raise SystemExit(f"--fault-spec: expected a JSON object, "
+                         f"got {type(spec).__name__}")
+    return F.FaultInjector.from_spec(spec)
+
+
+def _serve_fleet(args, cfg) -> None:
+    """Sharded serving of the integer recurrent LM through the fleet
+    router (admission routing + fault-plane recovery)."""
+    from repro.launch import engine as E
+    from repro.launch import fleet as F
+    from repro.runtime import sharding as shlib
+
+    params, qlayers = _quantized_recurrent_lm(args, cfg)
+    if args.trace:
+        requests = E.load_trace(args.trace, cfg.vocab_size, seed=1)
+    else:
+        requests = E.synthetic_trace(
+            args.requests, cfg.vocab_size, seed=1,
+            prompt_lens=(args.prompt_len // 2 or 1, args.prompt_len),
+            gen_lens=(args.gen // 2 or 1, args.gen),
+            arrival_span=max(args.requests // 2, 1))
+    if not requests:
+        raise SystemExit("fleet: empty workload (use --requests N >= 1 or "
+                         "a non-empty --trace)")
+    meshes = shlib.fleet_meshes(args.shards)
+    placed = sum(m is not None for m in meshes)
+    router = F.FleetRouter(
+        params, qlayers, cfg, n_shards=args.shards,
+        slots_per_shard=args.slots, backend=args.backend, chunk=args.chunk,
+        speculate=args.speculate, policy=args.policy,
+        oversubscribe=args.oversubscribe, injector=_load_fault_spec(
+            args.fault_spec), meshes=meshes)
+    router.warmup()
+    router.submit_all(requests)
+    results, stats = router.run()
+    print(f"arch={cfg.name} quant={args.quant} fleet shards={args.shards} "
+          f"slots/shard={args.slots} chunk={args.chunk} "
+          f"policy={args.policy} oversubscribe={args.oversubscribe} "
+          f"backend={args.backend} meshes={placed}/{args.shards}")
+    print(f"served {stats.completed}/{stats.submitted} requests in "
+          f"{stats.wall_s:.2f}s ({stats.fleet_steps} fleet steps); "
+          f"{stats.rejected} rejected, {stats.lost} lost")
+    print(f"goodput: {stats.goodput_tokens_per_step:.2f} tokens/step "
+          f"({stats.tokens_per_s:.1f} tokens/s)")
+    print(f"fault plane: {stats.kills} kills, {stats.restarts} restarts, "
+          f"{stats.hang_events} hung steps, {stats.migrated_streams} "
+          f"migrated, {stats.replayed_streams} replayed, "
+          f"{stats.rerouted_pending} rerouted, {stats.admit_retries} "
+          f"admission retries")
+    for i, s in enumerate(stats.shards):
+        print(f"  shard {i}: {'alive' if s.alive else 'dead '} "
+              f"steps={s.steps} occupancy={s.occupancy(args.slots):.2f} "
+              f"tokens={s.generated_tokens} adopted={s.adopted} "
+              f"stragglers={s.stragglers} hung={s.hung} "
+              f"kills={s.kills} restarts={s.restarts}")
+    done = [r for r in results.values() if r.tokens and not r.truncated]
+    if done:
+        ttfts = sorted(r.ttft_steps for r in done
+                       if r.ttft_steps is not None)
+        if ttfts:
+            print(f"TTFT p50/p99: {ttfts[len(ttfts) // 2]} / "
+                  f"{ttfts[min(len(ttfts) - 1, int(len(ttfts) * 0.99))]} "
+                  f"fleet steps")
+        print("sample:", done[0].tokens)
+
+
 def _serve_int8_recurrent(args, cfg) -> None:
     """Integer-only serving of the stacked recurrent LM (paper sec 3.2).
 
@@ -240,6 +337,16 @@ def main() -> None:
                          "live at once, time-multiplexed through the state "
                          "pool by preempting policies. 1.0 (default) never "
                          "holds more streams than slots")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="serve through the fleet router over N per-shard "
+                         "engines (requires --engine; launch/fleet.py). "
+                         "Each shard gets --slots decode rows and its own "
+                         "device mesh when enough devices exist")
+    ap.add_argument("--fault-spec", default=None,
+                    help="fault-injection spec for --shards: inline JSON or "
+                         "@file, schema per fleet.FaultInjector.from_spec "
+                         "(kills / hangs / admission failures, all seeded "
+                         "and deterministic)")
     ap.add_argument("--requests", type=int, default=16,
                     help="synthetic workload size for --engine")
     ap.add_argument("--trace", default=None,
@@ -266,13 +373,24 @@ def main() -> None:
         ap.error("--engine requires --quant int8-lstm or int8-gru (the "
                  "integer recurrent LMs are the only models with per-slot "
                  "integer decode state)")
+    if args.shards is not None and not args.engine:
+        ap.error("--shards requires --engine (the fleet router drives "
+                 "continuous-batching engines)")
+    if args.shards is not None and args.shards < 1:
+        ap.error("--shards must be >= 1")
+    if args.fault_spec is not None and args.shards is None:
+        ap.error("--fault-spec requires --shards (faults are injected at "
+                 "the fleet router)")
 
     from repro.configs.registry import get_config
     from repro.models import model_zoo, quant_transformer
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.engine:
-        _serve_engine(args, cfg)
+        if args.shards is not None:
+            _serve_fleet(args, cfg)
+        else:
+            _serve_engine(args, cfg)
         return
     if args.quant in ("int8-lstm", "int8-gru"):
         _serve_int8_recurrent(args, cfg)

@@ -5,14 +5,22 @@ re-enters ``run_with_restarts``; here we exercise the same control flow in
 one process (tests inject failures) so the recovery path is real code, not
 a comment.  Elasticity: on restart the mesh may differ -- restore re-places
 full arrays against the new shardings (see checkpoint.manager).
+
+Production consumers (PR 9): ``launch/engine.py`` wires a
+:class:`StepWatchdog` into its serving loop (per-step wall time against a
+running EMA, ``stragglers``/``hung`` surfaced in ``EngineStats``) and
+``launch/fleet.py``'s router treats a shard whose step goes ``hung`` as a
+fault-plane event (drain + re-admit elsewhere), so the watchdog verdict is
+an input to recovery, not just a log line.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional, Tuple, Type
 
-import numpy as np
+__all__ = ["StepWatchdog", "RestartStats", "run_with_restarts",
+           "RESTARTABLE_EXCEPTIONS"]
 
 
 class StepWatchdog:
@@ -21,16 +29,29 @@ class StepWatchdog:
     * ``timeout_factor`` x EMA -> considered HUNG (caller should abort/retry;
       on TPU fleets this is where you'd re-schedule the slice).
     * ``straggler_factor`` x EMA -> logged as straggler (mitigation hook).
+
+    ``stragglers`` / ``hung`` count the verdicts so far; ``last_verdict``
+    is the most recent classification (what the fleet router polls after
+    each shard step).  A hung step still updates the EMA -- a genuinely
+    slower regime stops alarming once the EMA catches up.
     """
 
     def __init__(self, timeout_factor: float = 10.0,
                  straggler_factor: float = 2.0, ema: float = 0.9):
+        if timeout_factor <= straggler_factor:
+            raise ValueError(
+                f"timeout_factor ({timeout_factor}) must exceed "
+                f"straggler_factor ({straggler_factor})")
+        if not 0.0 <= ema < 1.0:
+            raise ValueError(f"ema must be in [0, 1), got {ema}")
         self.timeout_factor = timeout_factor
         self.straggler_factor = straggler_factor
         self.ema_coef = ema
         self.ema_s: Optional[float] = None
         self.stragglers = 0
+        self.hung = 0
         self.steps = 0
+        self.last_verdict = "ok"
 
     def observe(self, seconds: float) -> str:
         self.steps += 1
@@ -38,11 +59,13 @@ class StepWatchdog:
         if self.ema_s is not None:
             if seconds > self.timeout_factor * self.ema_s:
                 verdict = "hung"
+                self.hung += 1
             elif seconds > self.straggler_factor * self.ema_s:
                 verdict = "straggler"
                 self.stragglers += 1
         self.ema_s = (seconds if self.ema_s is None
                       else self.ema_coef * self.ema_s + (1 - self.ema_coef) * seconds)
+        self.last_verdict = verdict
         return verdict
 
 
@@ -51,6 +74,17 @@ class RestartStats:
     restarts: int = 0
     completed_steps: int = 0
     resumed_from: Optional[int] = None
+    backoff_s_total: float = 0.0  # wall spent backing off between restarts
+
+
+# The default restart allowlist: infrastructure failures a restart can
+# plausibly cure (lost node, preempted VM, flaky filesystem/network, a step
+# that the watchdog timed out).  Programming errors -- TypeError, ValueError,
+# KeyError, assertion failures -- propagate immediately: restarting them
+# would deterministically re-fail and burn the restart budget for nothing.
+RESTARTABLE_EXCEPTIONS: Tuple[Type[BaseException], ...] = (
+    RuntimeError, OSError, TimeoutError, ConnectionError,
+)
 
 
 def run_with_restarts(
@@ -59,13 +93,36 @@ def run_with_restarts(
     ckpt_latest: Callable[[], Optional[int]],
     total_steps: int,
     max_restarts: int = 10,
+    restart_on: Tuple[Type[BaseException], ...] = RESTARTABLE_EXCEPTIONS,
+    backoff_s: float = 0.05,
+    backoff_cap_s: float = 5.0,
+    sleep: Callable[[float], None] = time.sleep,
 ) -> RestartStats:
     """Drive ``train_chunk(start_step) -> reached_step`` to completion,
-    restarting from the latest durable checkpoint on any exception.
+    restarting from the latest durable checkpoint on allowlisted exceptions.
 
     ``train_chunk`` is expected to checkpoint periodically and may raise at
     any point (node failure, preemption); restart resumes from disk.
+
+    Two deliberate hardenings over the naive retry loop:
+
+    * **Exception allowlist** (``restart_on``) -- only failures a restart
+      can plausibly cure are retried; anything else (a ``ValueError`` from
+      bad config, a ``KeyError`` from a renamed param) propagates
+      immediately instead of being retried ``max_restarts`` times.
+    * **Exponential backoff with a cap** -- restart ``n`` sleeps
+      ``min(backoff_s * 2**(n-1), backoff_cap_s)`` first (injectable
+      ``sleep`` for tests).  A persistent failure (checkpoint dir gone,
+      device wedged) therefore costs bounded wall time instead of a hot
+      busy-loop that hammers the checkpoint store ``max_restarts`` times
+      in microseconds.
     """
+    if max_restarts < 0:
+        raise ValueError(f"max_restarts must be >= 0, got {max_restarts}")
+    if backoff_s < 0 or backoff_cap_s < 0:
+        raise ValueError(
+            f"backoff_s/backoff_cap_s must be >= 0, got "
+            f"{backoff_s}/{backoff_cap_s}")
     stats = RestartStats()
     start = ckpt_latest() or 0
     stats.resumed_from = start
@@ -73,10 +130,14 @@ def run_with_restarts(
         try:
             start = train_chunk(start)
             stats.completed_steps = start
-        except Exception:
+        except restart_on:
             stats.restarts += 1
             if stats.restarts > max_restarts:
                 raise
-            resumed = ckpt_latest() or 0
-            start = resumed
+            pause = min(backoff_s * (2.0 ** (stats.restarts - 1)),
+                        backoff_cap_s)
+            if pause > 0:
+                sleep(pause)
+                stats.backoff_s_total += pause
+            start = ckpt_latest() or 0
     return stats

@@ -218,6 +218,45 @@ def pool_row_shardings(row_tree, rules, mesh) -> Any:
     return tree_shardings(specs, row_tree, rules, mesh)
 
 
+def fleet_device_groups(n_shards: int, devices=None):
+    """Partition the local devices into ``n_shards`` contiguous,
+    equal-size, disjoint groups -- the fleet router's shard placement.
+
+    Each per-shard engine gets its own device group (and mesh), so a shard
+    death is a *device-group* event: the survivors' slot tensors live on
+    other devices and are untouched.  Leftover devices (when the count does
+    not divide) stay unused rather than unbalancing shards.  Returns
+    ``None`` when there are fewer devices than shards -- the co-located CPU
+    test mode, where every shard shares the default device and placement is
+    a no-op (run under ``XLA_FLAGS=--xla_force_host_platform_device_count``
+    to get real groups on CPU).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < n_shards:
+        return None
+    k = len(devices) // n_shards
+    return [list(devices[i * k:(i + 1) * k]) for i in range(n_shards)]
+
+
+def fleet_meshes(n_shards: int, devices=None):
+    """One single-axis ``("data",)`` mesh per fleet shard over disjoint
+    device groups (``fleet_device_groups``), or ``[None] * n_shards`` when
+    there are not enough devices (mesh-less co-located engines).
+
+    The ``data`` axis matches the DP axes the engine's slot-state shardings
+    resolve against (``engine_state_shardings`` / ``engine_block_sharding``
+    with the ``tiny`` profile), so each shard's slot axis spreads over its
+    own devices and never touches a neighbour shard's.
+    """
+    groups = fleet_device_groups(n_shards, devices)
+    if groups is None:
+        return [None] * n_shards
+    return [Mesh(np.asarray(g), ("data",)) for g in groups]
+
+
 def state_logical(state_tree) -> Any:
     """Decode cache/state logical specs, keyed on (leaf name, rank).
 

@@ -1,0 +1,184 @@
+"""runtime/fault.py: watchdog verdicts/EMA + hardened restart driver.
+
+The watchdog's contract: first observation seeds the EMA silently, later
+observations classify against ``straggler_factor`` / ``timeout_factor``
+times the EMA and keep counting.  ``run_with_restarts``'s contract: only
+allowlisted exceptions restart (anything else propagates immediately),
+restarts back off exponentially with a cap (injectable sleep -- asserted
+on the exact pause sequence), and ANY failure schedule within
+``max_restarts`` completes (hypothesis property).
+"""
+import pytest
+
+from repro.runtime.fault import (RESTARTABLE_EXCEPTIONS, StepWatchdog,
+                                 run_with_restarts)
+
+pytestmark = pytest.mark.fast
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# StepWatchdog
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_first_observation_seeds_silently():
+    wd = StepWatchdog()
+    assert wd.observe(10.0) == "ok"  # no EMA yet -> nothing to compare
+    assert wd.ema_s == 10.0
+    assert wd.stragglers == 0 and wd.hung == 0 and wd.steps == 1
+
+
+def test_watchdog_verdicts_and_counters():
+    wd = StepWatchdog(timeout_factor=10.0, straggler_factor=2.0, ema=0.9)
+    wd.observe(1.0)  # seed
+    assert wd.observe(1.5) == "ok"
+    assert wd.observe(3.0) == "straggler"  # > 2x EMA, < 10x
+    assert wd.observe(100.0) == "hung"  # > 10x EMA
+    assert wd.stragglers == 1 and wd.hung == 1
+    assert wd.last_verdict == "hung"
+    assert wd.steps == 4
+
+
+def test_watchdog_ema_update_rule():
+    wd = StepWatchdog(ema=0.9)
+    wd.observe(1.0)
+    wd.observe(2.0)
+    assert wd.ema_s == pytest.approx(0.9 * 1.0 + 0.1 * 2.0)
+
+
+def test_watchdog_hung_step_still_updates_ema():
+    """A genuinely slower regime must stop alarming once the EMA catches
+    up -- the hung observation feeds the EMA like any other."""
+    wd = StepWatchdog(ema=0.5)
+    wd.observe(0.01)
+    assert wd.observe(1.0) == "hung"
+    assert wd.ema_s == pytest.approx(0.5 * 0.01 + 0.5 * 1.0)
+    # same wall time again: EMA has moved, verdict relaxes
+    assert wd.observe(1.0) != "hung"
+
+
+def test_watchdog_validates_factors():
+    with pytest.raises(ValueError):
+        StepWatchdog(timeout_factor=2.0, straggler_factor=2.0)
+    with pytest.raises(ValueError):
+        StepWatchdog(ema=1.0)
+    with pytest.raises(ValueError):
+        StepWatchdog(ema=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# run_with_restarts
+# ---------------------------------------------------------------------------
+
+
+class _Trainer:
+    """Checkpoints every step; fails (with ``exc``) at the step indices in
+    ``fail_at`` -- each index fires once."""
+
+    def __init__(self, fail_at, exc=RuntimeError):
+        self.fail_at = set(fail_at)
+        self.exc = exc
+        self.ckpt = None
+        self.calls = 0
+
+    def latest(self):
+        return self.ckpt
+
+    def chunk(self, start):
+        self.calls += 1
+        for step in range(start, start + 100):
+            if step in self.fail_at:
+                self.fail_at.remove(step)
+                raise self.exc(f"injected at {step}")
+            self.ckpt = step + 1
+        return self.ckpt
+
+
+def test_restarts_recover_and_count():
+    tr = _Trainer(fail_at=[5, 105])
+    stats = run_with_restarts(tr.chunk, ckpt_latest=tr.latest,
+                              total_steps=150, backoff_s=0.0)
+    assert stats.restarts == 2
+    assert stats.completed_steps >= 150
+
+
+def test_backoff_sequence_is_capped_exponential():
+    pauses = []
+    tr = _Trainer(fail_at=[1, 2, 3, 4, 5, 6])
+    stats = run_with_restarts(
+        tr.chunk, ckpt_latest=tr.latest, total_steps=10,
+        max_restarts=10, backoff_s=0.1, backoff_cap_s=1.0,
+        sleep=pauses.append)
+    # restart n sleeps min(0.1 * 2**(n-1), 1.0)
+    assert pauses == pytest.approx([0.1, 0.2, 0.4, 0.8, 1.0, 1.0])
+    assert stats.backoff_s_total == pytest.approx(sum(pauses))
+
+
+def test_non_allowlisted_exception_propagates_immediately():
+    tr = _Trainer(fail_at=[3], exc=ValueError)
+    with pytest.raises(ValueError):
+        run_with_restarts(tr.chunk, ckpt_latest=tr.latest, total_steps=10,
+                          backoff_s=0.0)
+    assert tr.calls == 1  # no retry burned on a deterministic failure
+
+
+def test_custom_allowlist_overrides_default():
+    tr = _Trainer(fail_at=[3], exc=KeyError)
+    stats = run_with_restarts(tr.chunk, ckpt_latest=tr.latest,
+                              total_steps=10, restart_on=(KeyError,),
+                              backoff_s=0.0)
+    assert stats.restarts == 1
+
+
+def test_default_allowlist_covers_infra_failures():
+    for exc in RESTARTABLE_EXCEPTIONS:
+        tr = _Trainer(fail_at=[2], exc=exc)
+        stats = run_with_restarts(tr.chunk, ckpt_latest=tr.latest,
+                                  total_steps=5, backoff_s=0.0)
+        assert stats.restarts == 1, exc
+
+
+def test_max_restarts_exceeded_reraises():
+    tr = _Trainer(fail_at=[1, 2, 3])
+    with pytest.raises(RuntimeError):
+        run_with_restarts(tr.chunk, ckpt_latest=tr.latest, total_steps=10,
+                          max_restarts=2, backoff_s=0.0)
+
+
+def test_param_validation():
+    tr = _Trainer(fail_at=[])
+    with pytest.raises(ValueError):
+        run_with_restarts(tr.chunk, ckpt_latest=tr.latest, total_steps=5,
+                          max_restarts=-1)
+    with pytest.raises(ValueError):
+        run_with_restarts(tr.chunk, ckpt_latest=tr.latest, total_steps=5,
+                          backoff_s=-0.1)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(fail_at=st.sets(st.integers(min_value=0, max_value=299),
+                           max_size=8),
+           total=st.integers(min_value=1, max_value=300))
+    def test_any_failure_schedule_within_budget_completes(fail_at, total):
+        """Property: for ANY schedule of <= max_restarts transient
+        failures, the driver reaches total_steps and never loses
+        checkpointed work (checkpoint progress is monotone: a failure at
+        step s restarts from a checkpoint >= the last one, never
+        earlier)."""
+        tr = _Trainer(fail_at=fail_at)
+        stats = run_with_restarts(tr.chunk, ckpt_latest=tr.latest,
+                                  total_steps=total, max_restarts=8,
+                                  backoff_s=0.0)
+        assert (tr.ckpt or 0) >= total  # the training goal was reached
+        # every failure scheduled before the goal must have actually fired
+        assert not any(f < total for f in tr.fail_at)
+        assert stats.restarts <= 8

@@ -1,0 +1,382 @@
+"""Fleet tier: admission routing, fault injection, shard-kill recovery.
+
+THE acceptance property (ISSUE 9): with a seeded ``FaultInjector`` killing
+1 of 2 shards mid-flight, every stream -- including the ones re-admitted to
+the survivor with migrated state or a replayed prefix -- completes
+bit-identical to ``decode_single`` of its original request.  That is the
+paper's integer-state compactness cashing in as recovery correctness: the
+state is a few hundred host bytes, slices/stacks losslessly, and integer
+math re-rounds nothing on the way back in.
+
+Multi-device placement (disjoint per-shard meshes under
+``--xla_force_host_platform_device_count``) is exercised in a subprocess
+(not marked fast): XLA_FLAGS must be set before jax initializes.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import SMOKE_CONFIGS
+from repro.launch import engine as E
+from repro.launch import fleet as F
+from repro.models import lstm_lm, model_zoo
+from repro.runtime import sharding as shlib
+from repro.runtime.fault import StepWatchdog
+
+pytestmark = pytest.mark.fast
+
+
+@pytest.fixture(scope="module")
+def qlm():
+    cfg = SMOKE_CONFIGS["lstm-rnnt"]
+    bundle = model_zoo.build(cfg)
+    params, _ = bundle.init(jax.random.PRNGKey(0))
+    calib = jax.random.randint(jax.random.PRNGKey(2), (4, 8), 0,
+                               cfg.vocab_size)
+    qlayers = lstm_lm.quantize_stack(params, cfg, calib)
+    return params, qlayers, cfg
+
+
+def _requests(cfg, spec, *, arrivals=None):
+    rng = np.random.default_rng(7)
+    out = []
+    for i, (p, g) in enumerate(spec):
+        out.append(E.Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, size=(p,)),
+            max_new_tokens=g,
+            arrival=float(arrivals[i]) if arrivals else 0.0))
+    return out
+
+
+def _reference(qlm, requests):
+    params, qlayers, cfg = qlm
+    return {r.rid: E.decode_single(params, qlayers, cfg, r.prompt,
+                                   r.max_new_tokens) for r in requests}
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector determinism (no model needed)
+# ---------------------------------------------------------------------------
+
+
+def test_killspec_validates_trigger():
+    with pytest.raises(ValueError):
+        F.KillSpec(shard=0)  # neither trigger
+    with pytest.raises(ValueError):
+        F.KillSpec(shard=0, at_step=3, at_frac=0.5)  # both
+    with pytest.raises(ValueError):
+        F.KillSpec(shard=0, at_frac=1.5)
+
+
+def test_kills_fire_exactly_once():
+    inj = F.FaultInjector(kills=[dict(shard=0, at_step=5),
+                                 dict(shard=1, at_frac=0.5)])
+    assert inj.kills_due(4, 0.0) == []
+    due = inj.kills_due(5, 0.0)
+    assert [k.shard for k in due] == [0]
+    assert inj.kills_due(6, 0.4) == []  # step kill consumed, frac not due
+    assert [k.shard for k in inj.kills_due(7, 0.6)] == [1]
+    assert inj.kills_due(8, 1.0) == []
+
+
+def test_admission_failures_deterministic():
+    inj = F.FaultInjector(seed=3, admission_fails={4: 2},
+                          admission_fail_rate=0.3)
+    # explicit schedule: first 2 attempts of rid 4 fail, then the rate draw
+    assert inj.admission_fails_for(4, 0) and inj.admission_fails_for(4, 1)
+    # rate-based draws are a pure function of (seed, rid, attempt)
+    twin = F.FaultInjector(seed=3, admission_fail_rate=0.3)
+    for rid in range(20):
+        for attempt in range(3):
+            assert (inj.admission_fails_for(rid + 100, attempt)
+                    == twin.admission_fails_for(rid + 100, attempt))
+    other = F.FaultInjector(seed=4, admission_fail_rate=0.3)
+    draws = [(rid, a) for rid in range(40) for a in range(3)]
+    assert any(twin.admission_fails_for(r, a) != other.admission_fails_for(r, a)
+               for r, a in draws), "different seeds never diverged"
+
+
+def test_from_spec_rejects_unknown_keys():
+    with pytest.raises(ValueError):
+        F.FaultInjector.from_spec({"kils": []})
+    inj = F.FaultInjector.from_spec(
+        {"seed": 1, "kills": [{"shard": 0, "at_frac": 0.5}],
+         "admission_fails": {"7": 2}})
+    assert inj.kills[0].at_frac == 0.5
+    assert inj.admission_fails == {7: 2}
+
+
+def test_hook_only_for_targeted_shards():
+    inj = F.FaultInjector(hangs=[dict(shard=1, at_step=2, sleep_s=0.0)])
+    assert inj.hook_for(0) is None
+    assert inj.hook_for(1) is not None
+
+
+# ---------------------------------------------------------------------------
+# Router placement helpers
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_device_groups_partition():
+    devs = list(range(8))  # the helper only len()s and slices
+    groups = shlib.fleet_device_groups(3, devices=devs)
+    assert groups == [[0, 1], [2, 3], [4, 5]]  # disjoint, equal, leftovers
+    assert shlib.fleet_device_groups(9, devices=devs) is None
+    with pytest.raises(ValueError):
+        shlib.fleet_device_groups(0, devices=devs)
+
+
+def test_fleet_meshes_degrade_without_devices():
+    meshes = shlib.fleet_meshes(4)  # single test device -> co-located mode
+    if len(jax.devices()) < 4:
+        assert meshes == [None] * 4
+
+
+# ---------------------------------------------------------------------------
+# Engine-level satellites: watchdog surfacing, export/adopt, duplicate rids
+# ---------------------------------------------------------------------------
+
+
+def test_engine_watchdog_flags_injected_hang(qlm):
+    params, qlayers, cfg = qlm
+    reqs = _requests(cfg, [(2, 8), (3, 8)])
+    # warm the compiled programs so the watchdog EMA seeds on a real step
+    warm = E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=2)
+    warm.submit(E.Request(rid=0, prompt=np.zeros(2, np.int32),
+                          max_new_tokens=2))
+    warm.run()
+
+    hung_at = []
+
+    def hook(step):
+        if step == 3:
+            hung_at.append(step)
+            import time
+            time.sleep(0.3)
+
+    wd = StepWatchdog()
+    eng = E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=2,
+                                     watchdog=wd, step_hook=hook)
+    eng.submit_all(reqs)
+    results, stats = eng.run()
+    assert hung_at == [3]
+    assert stats.hung >= 1  # the injected sleep read as a hung device
+    assert wd.hung >= 1 and wd.last_verdict in ("ok", "straggler", "hung")
+    ref = _reference(qlm, reqs)
+    for r in reqs:  # a hang slows the step; it must not corrupt it
+        assert results[r.rid].tokens == ref[r.rid]
+
+
+def test_export_adopt_roundtrip_bitexact(qlm):
+    """Drain a half-done engine and adopt its streams into a fresh one:
+    the continuation must be bit-exact (the migration primitive the fleet
+    router builds recovery on)."""
+    params, qlayers, cfg = qlm
+    reqs = _requests(cfg, [(2, 9), (3, 7), (5, 5)])
+    ref = _reference(qlm, reqs)
+    src = E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=2,
+                                     oversubscribe=2.0, policy="srf")
+    src.submit_all(reqs)
+    partial, _ = src.run(max_steps=6, keep_live=True)
+    exported = src.export_streams(device_alive=True)
+    assert src.live == 0 and src.pending == 0
+    dst = E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=2)
+    done = dict(partial)
+    for ms in exported:
+        if ms.pending:
+            dst.submit(ms.request)
+        else:
+            dst.adopt_stream(ms.request, state_row=ms.state_row,
+                             fed=ms.fed, generated=ms.generated,
+                             drafter=ms.drafter)
+    results, _ = dst.run()
+    done.update(results)
+    for r in reqs:
+        assert done[r.rid].tokens == ref[r.rid], f"stream {r.rid} drifted"
+
+
+def test_adopt_rejects_bad_input(qlm):
+    params, qlayers, cfg = qlm
+    eng = E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=2)
+    req = E.Request(rid=1, prompt=np.zeros(3, np.int32), max_new_tokens=4)
+    with pytest.raises(ValueError, match="state row"):
+        eng.adopt_stream(req, state_row=None, fed=2)
+    row = jax.device_get(lstm_lm.slice_state(
+        lstm_lm.init_quant_decode_state(qlayers, 2, per_slot_len=True), 0))
+    with pytest.raises(ValueError, match="nothing to adopt"):
+        eng.adopt_stream(req, state_row=row, fed=3, generated=[1, 2, 3, 4])
+    with pytest.raises(ValueError, match="inconsistent"):
+        eng.adopt_stream(req, state_row=row, fed=9, generated=[1])
+
+
+def test_duplicate_rid_rejected_everywhere(qlm):
+    params, qlayers, cfg = qlm
+    req = E.Request(rid=5, prompt=np.zeros(2, np.int32), max_new_tokens=2)
+    dup = E.Request(rid=5, prompt=np.ones(3, np.int32), max_new_tokens=3)
+    eng = E.ContinuousBatchingEngine(params, qlayers, cfg, n_slots=2)
+    eng.submit(req)
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(dup)
+    row = jax.device_get(lstm_lm.slice_state(
+        lstm_lm.init_quant_decode_state(qlayers, 2, per_slot_len=True), 0))
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.adopt_stream(dup, state_row=row, fed=1)
+    router = F.FleetRouter(params, qlayers, cfg, n_shards=1,
+                           slots_per_shard=2)
+    router.submit(E.Request(rid=5, prompt=np.zeros(2, np.int32),
+                            max_new_tokens=2))
+    with pytest.raises(ValueError, match="duplicate"):
+        router.submit(dup)
+    with pytest.raises(ValueError, match=">= 0"):
+        router.submit(E.Request(rid=-3, prompt=np.zeros(2, np.int32),
+                                max_new_tokens=2))
+
+
+# ---------------------------------------------------------------------------
+# Router: the acceptance property + fault-plane behaviors
+# ---------------------------------------------------------------------------
+
+
+def test_shard_kill_recovery_bitexact(qlm):
+    """ACCEPTANCE: seeded injector hard-kills 1 of 2 shards mid-flight
+    while it is oversubscribed; pooled streams migrate with state,
+    residents replay their prefix, and EVERY stream completes bit-identical
+    to decode_single.
+
+    Workload shape matters: srf only parks a resident in the pool when a
+    SHORTER stream arrives later and preempts it, so the first four (long)
+    requests land two per shard at step 0 and a short request arrives at
+    step 2 on each shard (least-loaded ties break to the lower index) --
+    by the step-5 kill, shard 0 deterministically holds both residents
+    (device rows die -> replay) and a preempted pooled stream (host pages
+    survive -> migrate)."""
+    params, qlayers, cfg = qlm
+    reqs = _requests(cfg, [(3, 12), (3, 12), (3, 12), (3, 12),
+                           (2, 3), (2, 3)],
+                     arrivals=[0, 0, 0, 0, 2, 2])
+    ref = _reference(qlm, reqs)
+    inj = F.FaultInjector(seed=0, kills=[dict(shard=0, at_step=5)])
+    router = F.FleetRouter(params, qlayers, cfg, n_shards=2,
+                           slots_per_shard=2, oversubscribe=2.0,
+                           policy="srf", injector=inj)
+    router.warmup()
+    router.submit_all(reqs)
+    results, stats = router.run()
+    assert stats.kills == 1
+    assert stats.completed == len(reqs)
+    # both recovery paths exercised: the killed shard was oversubscribed
+    # (pooled pages survive the device -> migrate) and had residents
+    # (device rows died -> replay)
+    assert stats.migrated_streams >= 1, "no pooled stream migrated"
+    assert stats.replayed_streams >= 1, "no resident stream replayed"
+    for r in reqs:
+        fr = results[r.rid]
+        assert not fr.truncated and not fr.rejected
+        assert fr.tokens == ref[r.rid], f"stream {r.rid} drifted"
+        assert len(fr.tokens) == r.max_new_tokens
+
+
+def test_graceful_drain_migrates_everything(qlm):
+    params, qlayers, cfg = qlm
+    reqs = _requests(cfg, [(2, 9), (3, 7), (5, 6), (2, 8)])
+    ref = _reference(qlm, reqs)
+    inj = F.FaultInjector(kills=[dict(shard=0, at_step=5, graceful=True)])
+    router = F.FleetRouter(params, qlayers, cfg, n_shards=2,
+                           slots_per_shard=2, injector=inj)
+    router.warmup()
+    router.submit_all(reqs)
+    results, stats = router.run()
+    assert stats.replayed_streams == 0  # graceful: nothing re-ingests
+    assert stats.migrated_streams >= 1
+    for r in reqs:
+        assert results[r.rid].tokens == ref[r.rid]
+
+
+def test_kill_with_restart_rejoins_fleet(qlm):
+    params, qlayers, cfg = qlm
+    reqs = _requests(cfg, [(2, 9), (3, 9), (2, 8), (3, 8), (2, 7), (3, 7)],
+                     arrivals=[0, 0, 0, 8, 10, 12])
+    ref = _reference(qlm, reqs)
+    inj = F.FaultInjector(kills=[dict(shard=0, at_step=4,
+                                      restart_after=4)])
+    router = F.FleetRouter(params, qlayers, cfg, n_shards=2,
+                           slots_per_shard=2, injector=inj)
+    router.warmup()
+    router.submit_all(reqs)
+    results, stats = router.run()
+    assert stats.kills == 1 and stats.restarts == 1
+    assert stats.shards[0].restarts == 1 and stats.shards[0].alive
+    # the restarted shard took real work afterwards
+    assert stats.shards[0].generated_tokens > 0
+    for r in reqs:
+        assert results[r.rid].tokens == ref[r.rid]
+
+
+def test_hang_verdict_drains_shard(qlm):
+    """An injected step hang trips the shard watchdog; on_hang='kill'
+    turns the verdict into a graceful drain and the streams finish on the
+    survivor, bit-exactly."""
+    params, qlayers, cfg = qlm
+    reqs = _requests(cfg, [(2, 9), (3, 7), (5, 6), (2, 8)])
+    ref = _reference(qlm, reqs)
+    inj = F.FaultInjector(hangs=[dict(shard=0, at_step=4, sleep_s=0.3)])
+    router = F.FleetRouter(params, qlayers, cfg, n_shards=2,
+                           slots_per_shard=2, injector=inj,
+                           on_hang="kill")
+    router.warmup()  # EMA must seed from post-compile steps
+    router.submit_all(reqs)
+    results, stats = router.run()
+    assert stats.hang_events >= 1
+    assert stats.kills >= 1
+    assert not stats.shards[0].alive
+    for r in reqs:
+        assert results[r.rid].tokens == ref[r.rid]
+
+
+def test_admission_retry_backoff_and_exhaustion(qlm):
+    params, qlayers, cfg = qlm
+    reqs = _requests(cfg, [(2, 5), (3, 5), (2, 4)])
+    ref = _reference(qlm, reqs)
+    inj = F.FaultInjector(admission_fails={0: 2, 1: 99})
+    router = F.FleetRouter(params, qlayers, cfg, n_shards=1,
+                           slots_per_shard=2, injector=inj,
+                           max_admit_attempts=3, backoff_steps=1,
+                           backoff_cap_steps=4)
+    router.submit_all(reqs)
+    results, stats = router.run()
+    # rid 0: attempts 0,1 fail transiently, attempt 2 lands
+    assert results[0].admit_attempts == 3
+    assert results[0].tokens == ref[0]
+    # rid 1: budget exhausted -> rejected, no tokens
+    assert results[1].rejected and results[1].tokens == []
+    assert results[2].tokens == ref[2]
+    assert stats.admit_retries >= 2
+    assert stats.rejected == 1
+
+
+def test_saturated_fleet_degrades_to_fifo_reject(qlm):
+    params, qlayers, cfg = qlm
+    reqs = _requests(cfg, [(2, 8), (2, 8), (2, 8), (2, 8)])
+    router = F.FleetRouter(params, qlayers, cfg, n_shards=1,
+                           slots_per_shard=1, max_queue=1)
+    router.submit_all(reqs)
+    results, stats = router.run()
+    assert stats.rejected >= 1  # overflow bounced, fifo-reject style
+    assert stats.completed >= 1
+    served = [r for r in results.values() if not r.rejected]
+    ref = _reference(qlm, reqs)
+    for fr in served:
+        assert fr.tokens == ref[fr.rid]
+
+
+def test_whole_fleet_death_surfaces_lost_streams(qlm):
+    params, qlayers, cfg = qlm
+    reqs = _requests(cfg, [(2, 8), (3, 8)])
+    inj = F.FaultInjector(kills=[dict(shard=0, at_step=4)])
+    router = F.FleetRouter(params, qlayers, cfg, n_shards=1,
+                           slots_per_shard=2, injector=inj)
+    router.submit_all(reqs)
+    results, stats = router.run()
+    assert stats.lost == len(reqs)  # no survivor, no restart scheduled
+    for r in reqs:
+        assert results[r.rid].truncated  # surfaced, not silently dropped
